@@ -1,0 +1,30 @@
+"""Paper Table 3: per-image metadata size vs full image size — the asymmetry that
+makes the communication phase cheap and the page server necessary."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import build_fleet, emit, save_json
+
+
+def run() -> Dict:
+    from repro.core import workloads as wl
+    mgr, reg, orch = build_fleet()
+    rows: Dict = {}
+    for image_id in ["py-base", "model-tiny", "model-small", "model-medium"]:
+        img = mgr._ensure_live(image_id)
+        rows[image_id] = {
+            "metadata_bytes": img.metadata_bytes,
+            "image_bytes": img.image_bytes,
+            "payload_bytes": img.metadata.page_table.nbytes_payload,
+            "n_pages": img.metadata.page_table.n_pages,
+            "ratio": img.image_bytes / max(img.metadata_bytes, 1),
+        }
+        emit(f"metadata/{image_id}", img.metadata_bytes,
+             f"image={img.image_bytes/1e6:.1f}MB ratio=x{rows[image_id]['ratio']:.0f}")
+    save_json("bench_metadata", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Table 2: cold/warm starts across the four restore prototypes
+(bulk restore, lazy restore, w/o page server, w/o lazy migration) for the three
+dependency-heavy serving functions."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import build_fleet, emit, median, save_json
+
+FUNCTIONS = ["lr_serving", "cnn_serving", "rnn_serving"]
+ITERS = 3
+
+
+def run() -> Dict:
+    from repro.core import RestorePolicy
+    from repro.core import workloads as wl
+    mgr, reg, orch = build_fleet()
+    rows: Dict = {}
+    for policy in [RestorePolicy.BULK, RestorePolicy.LAZY,
+                   RestorePolicy.NO_PAGESERVER, RestorePolicy.NO_LAZY]:
+        rows[policy.value] = {}
+        for fn in FUNCTIONS:
+            cold, warm = [], []
+            stats = None
+            for _ in range(ITERS):
+                inst, t = orch.cold_start_warmswap(fn, policy=policy)
+                cold.append(t.total)
+                req = wl.WORKLOADS[fn].request_builder()
+                warm.append(min(inst.invoke(req)[1] for _ in range(3)))
+                stats = getattr(inst, "migration_stats", None)
+            rows[policy.value][fn] = {
+                "cold_s": median(cold),
+                "warm_s": median(warm),
+                "pages": getattr(stats, "pages_transferred", None),
+                "requests": getattr(stats, "requests", None),
+                "fault_wait_s": getattr(stats, "fault_wait_s", None),
+            }
+            emit(f"policy/{policy.value}/{fn}", median(cold) * 1e6,
+                 f"warm={median(warm)*1e6:.0f}us pages="
+                 f"{rows[policy.value][fn]['pages']}")
+    save_json("bench_policies", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Assignment §Roofline: the per-(arch x shape x mesh) roofline table, read from the
+dry-run artifacts (results/dryrun/*.json). Single-pod cells form the headline table;
+multi-pod cells prove the 'pod' axis shards."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_records(mesh: str = "single") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: List[Dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} "
+           f"{'bound':>7s} {'useful':>7s} {'MFU_ub':>7s} {'live_GB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"{r.get('status', '?'):>9s}  {r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        rt = r["roofline"]
+        live = r.get("memory", {}).get("live_bytes", 0) / 1e9
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {rt['compute_s']:9.4f} "
+            f"{rt['memory_s']:9.4f} {rt['collective_s']:9.4f} "
+            f"{rt['bottleneck']:>7s} {rt['useful_flops_ratio']:7.2f} "
+            f"{min(rt['mfu_upper_bound'], 99.0):7.3f} {live:8.2f}")
+    return "\n".join(lines)
+
+
+def run() -> Dict:
+    out = {}
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        ok = [r for r in recs if r.get("status") == "ok"]
+        failed = [r for r in recs if r.get("status") == "failed"]
+        skipped = [r for r in recs if r.get("status") == "skipped"]
+        out[mesh] = {"ok": len(ok), "failed": len(failed), "skipped": len(skipped),
+                     "records": recs}
+        for r in ok:
+            rt = r["roofline"]
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 rt["step_lower_bound_s"] * 1e6,
+                 f"bound={rt['bottleneck']} useful={rt['useful_flops_ratio']:.2f} "
+                 f"mfu_ub={rt['mfu_upper_bound']:.3f}")
+        if mesh == "single":
+            print()
+            print(format_table(recs))
+            print()
+    save_json("bench_roofline", {m: {k: v for k, v in d.items() if k != "records"}
+                                 for m, d in out.items()})
+    return out
+
+
+if __name__ == "__main__":
+    run()

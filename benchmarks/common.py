@@ -1,0 +1,65 @@
+"""Shared benchmark scaffolding: fleet setup, timing, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import tempfile
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The assignment's CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def median(xs: List[float]) -> float:
+    return statistics.median(xs) if xs else 0.0
+
+
+_STACK = None
+
+
+def build_fleet(functions: Optional[List[str]] = None, link=None):
+    """One shared provider stack for all cold-start benchmarks (images built once,
+    exactly like a provider would)."""
+    global _STACK
+    from repro.core import (ColdStartConfig, ColdStartOrchestrator,
+                            DependencyManager, FunctionRegistry)
+    from repro.core import workloads as wl
+
+    if _STACK is not None:
+        return _STACK
+    functions = functions or list(wl.WORKLOADS)
+    tmp = tempfile.mkdtemp(prefix="warmswap-bench-")
+    mgr = DependencyManager(disk_dir=os.path.join(tmp, "pool"),
+                            link=link or __import__(
+                                "repro.core.migration", fromlist=["LinkModel"]
+                            ).LinkModel())
+    reg = FunctionRegistry(store_dir=os.path.join(tmp, "store"))
+    mgr.register_image("py-base", "py-base", wl.py_base_builder)
+    needed_images = {wl.WORKLOADS[f].image_id for f in functions}
+    for img_id in sorted(needed_images - {"py-base"}):
+        builder = wl.model_params_builder(img_id)
+        execs = wl.make_model_executables(img_id)
+        wl.warm_executables(execs, builder(), img_id)
+        mgr.register_image(img_id, img_id, builder, executables=execs)
+    for fn in functions:
+        w = wl.WORKLOADS[fn]
+        bb = (wl.model_params_builder(w.image_id)
+              if w.image_id in wl.IMAGE_CONFIGS else wl.py_base_builder)
+        reg.register(fn, w.image_id, w.handler_builder, w.handler_fn,
+                     base_params_builder=bb, write_baseline_checkpoint=True)
+    orch = ColdStartOrchestrator(mgr, reg, ColdStartConfig())
+    _STACK = (mgr, reg, orch)
+    return _STACK

@@ -1,0 +1,48 @@
+"""Benchmark driver — one benchmark per paper table/figure + assignment artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--only coldstart,...]
+
+Emits ``name,us_per_call,derived`` CSV rows (stdout) and JSON artifacts under
+results/.  Mapping to the paper:
+
+    bench_coldstart  ->  Figs. 3, 5, 6 (cold/warm, phase breakdown)
+    bench_policies   ->  Table 2 (bulk / lazy / no-pageserver / no-lazy)
+    bench_metadata   ->  Table 3 (metadata vs image size)
+    bench_sharing    ->  Fig. 7 + 88% memory headline (Azure-trace simulation)
+    bench_kernels    ->  kernel-path microbenches + VMEM accounting
+    bench_roofline   ->  assignment §Roofline table (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["coldstart", "policies", "metadata", "sharing", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {BENCHES}")
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else BENCHES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in todo:
+        mod_name = f"benchmarks.bench_{name}"
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+            print(f"# {name}: ok ({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n{traceback.format_exc()}", file=sys.stderr)
+    sys.exit(int(failures > 0))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpointer import (
+    CheckpointConfig,
+    Checkpointer,
+    latest_step,
+)
+
+__all__ = ["CheckpointConfig", "Checkpointer", "latest_step"]

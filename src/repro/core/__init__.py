@@ -1,0 +1,33 @@
+"""WarmSwap core: live dependency sharing for serverless model serving.
+
+Public API:
+  * pages       — pytree <-> page-store encoding (the memory-page layer)
+  * image       — LiveDependencyImage / build_image (the shareable unit)
+  * pool        — DependencyManager (provider-side pool, RAM+disk tiers, LRU)
+  * migration   — PageServer + MigrationClient, 4 restore policies (Table 2)
+  * registry    — FunctionRegistry (endpoints = image ref + private handler)
+  * coldstart   — ColdStartOrchestrator with per-phase timers (Figs. 3/6)
+  * keepalive   — E_cs(λ) arrival math (§2.2)
+  * traces      — Azure-statistics trace generation (§4.5)
+  * simulator   — fleet simulation: WarmSwap vs Prebaking vs Baseline (Fig. 7)
+  * workloads   — FunctionBench-analogue suite (Table 1)
+"""
+from repro.core.coldstart import ColdStartConfig, ColdStartOrchestrator, PhaseTimes
+from repro.core.image import ImageMetadata, LiveDependencyImage, build_image
+from repro.core.keepalive import KeepAlivePolicy, expected_cold_starts
+from repro.core.migration import LinkModel, MigrationClient, PageServer, RestorePolicy
+from repro.core.pages import PageTable, materialize, paginate
+from repro.core.pool import DependencyManager
+from repro.core.registry import FunctionRegistry
+from repro.core.simulator import CostModel, memory_saving_fraction, simulate
+from repro.core.traces import generate_traces
+
+__all__ = [
+    "ColdStartConfig", "ColdStartOrchestrator", "PhaseTimes",
+    "ImageMetadata", "LiveDependencyImage", "build_image",
+    "KeepAlivePolicy", "expected_cold_starts",
+    "LinkModel", "MigrationClient", "PageServer", "RestorePolicy",
+    "PageTable", "materialize", "paginate",
+    "DependencyManager", "FunctionRegistry",
+    "CostModel", "memory_saving_fraction", "simulate", "generate_traces",
+]

@@ -1,0 +1,55 @@
+"""AOT executable serialization for dependency images (paper §3.2 disk tier).
+
+A live dependency image carries pre-built executables (the XLA analogue of
+pre-imported middleware). In-process that's a warm jit cache; to survive the disk
+tier and process restarts — the paper's "checkpoint images on disk regenerate live
+images without re-running initialization" — executables are exported with
+``jax.export`` into portable serialized artifacts:
+
+    blobs = serialize_executables({'prefill': jitted_fn}, {'prefill': sample_args})
+    ...process restart / image revived from disk...
+    execs = deserialize_executables(blobs)      # no XLA re-compile
+    execs['prefill'](params, tokens)
+
+Deserialized entries are thin callables over ``jax.export.deserialize(...).call``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+from jax import export as jax_export
+
+
+def serialize_executables(
+    execs: Dict[str, Callable],
+    sample_args: Dict[str, Tuple[Any, ...]],
+) -> Dict[str, bytes]:
+    """Export each jitted callable traced at its sample arguments."""
+    blobs: Dict[str, bytes] = {}
+    for name, fn in execs.items():
+        args = sample_args[name]
+        exported = jax_export.export(fn if hasattr(fn, "lower") else jax.jit(fn))(
+            *jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                if hasattr(a, "shape") else a, args))
+        blobs[name] = bytes(exported.serialize())
+    return blobs
+
+
+def deserialize_executables(blobs: Dict[str, bytes]) -> Dict[str, Callable]:
+    """Rehydrate serialized executables into callables (no retrace/recompile of the
+    original function; XLA consumes the stored StableHLO)."""
+    out: Dict[str, Callable] = {}
+    for name, blob in blobs.items():
+        exported = jax_export.deserialize(blob)
+
+        def call(*args, _exp=exported):
+            return _exp.call(*args)
+
+        out[name] = call
+    return out
+
+
+def executables_nbytes(blobs: Dict[str, bytes]) -> int:
+    return sum(len(b) for b in blobs.values())

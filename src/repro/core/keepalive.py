@@ -1,0 +1,48 @@
+"""Keep-alive / cold-start arrival math (paper §2.2, Fig. 1).
+
+With Poisson invocations at rate λ (per minute) and keep-alive T minutes:
+
+    P(no invocation within T)  =  e^(−λT)                       (paper Eq. 1)
+    E[cold starts in D min]    =  D · λ · e^(−λT)                (paper Eq. 2)
+
+maximized at λ* = 1/T. Function-specific tuning pays off only when
+w·E_cs(λ) > c (Eq. 3) — the long tail fails this test, which is WarmSwap's
+raison d'être.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def p_no_invocation(lam: float, keep_alive_min: float) -> float:
+    return math.exp(-lam * keep_alive_min)
+
+
+def expected_cold_starts(lam, keep_alive_min: float, horizon_min: float):
+    """Vectorized Eq. 2."""
+    lam = np.asarray(lam, dtype=np.float64)
+    return horizon_min * lam * np.exp(-lam * keep_alive_min)
+
+
+def argmax_rate(keep_alive_min: float) -> float:
+    """The invocation rate with the most expected cold starts: λ* = 1/T."""
+    return 1.0 / keep_alive_min
+
+
+def worth_function_specific_tuning(lam: float, keep_alive_min: float,
+                                   horizon_min: float, benefit_per_cs: float,
+                                   cost: float) -> bool:
+    """Paper Eq. 3: w·E_cs(λ) > c."""
+    return benefit_per_cs * float(expected_cold_starts(lam, keep_alive_min,
+                                                       horizon_min)) > cost
+
+
+@dataclass(frozen=True)
+class KeepAlivePolicy:
+    keep_alive_min: float = 15.0     # paper's default (§4.5); AWS/Azure use 5–30
+
+    def expires_at(self, last_use_min: float) -> float:
+        return last_use_min + self.keep_alive_min

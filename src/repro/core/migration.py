@@ -1,0 +1,213 @@
+"""Live migration of dependency images: the page server and restore policies.
+
+Implements all four prototypes measured in the paper's Table 2:
+
+  * ``BULK``          — WarmSwap bulk ("initiative") restore: on the first page fault
+                        the page server streams ALL remaining pages in the background,
+                        in layer order, overlapping with the function's own work.
+  * ``LAZY``          — WarmSwap lazy restore: every fault fetches exactly the pages
+                        of the faulting leaf, paying per-fault latency each time.
+  * ``NO_PAGESERVER`` — copy the whole serialized image into the container, then
+                        restore (the paper's "w/o Page Server" variant).
+  * ``NO_LAZY``       — transfer every page through the page server *before*
+                        execution begins (the paper's "w/o Lazy Migration" variant).
+
+The page server models the provider-side transport: a local pool moves pages at
+host-memcpy speed; a remote pool adds a configurable per-request latency and
+bandwidth (DCN analogue). All timing is wall-clock measured, not simulated — the
+sleeps only extend real copies when a remote link is being modelled.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.image import ImageMetadata, LiveDependencyImage
+from repro.core.pages import materialize_leaf
+
+
+class RestorePolicy(enum.Enum):
+    BULK = "bulk"
+    LAZY = "lazy"
+    NO_PAGESERVER = "no_pageserver"
+    NO_LAZY = "no_lazy"
+
+
+@dataclass
+class LinkModel:
+    """Transport between the pool and a function container."""
+    latency_s: float = 0.0          # per page-server request
+    bandwidth_bps: Optional[float] = None  # None = host memcpy speed (local pool)
+
+    def delay_for(self, nbytes: int) -> float:
+        d = self.latency_s
+        if self.bandwidth_bps:
+            d += nbytes / self.bandwidth_bps
+        return d
+
+
+@dataclass
+class MigrationStats:
+    requests: int = 0
+    pages_transferred: int = 0
+    bytes_transferred: int = 0
+    faults: int = 0
+    fault_wait_s: float = 0.0        # time execution spent blocked on pages
+    stream_s: float = 0.0            # background streaming wall time
+
+
+class PageServer:
+    """Provider-side server bound to one live image (paper §3.2: one per target)."""
+
+    def __init__(self, image: LiveDependencyImage, link: LinkModel = LinkModel()):
+        self._image = image
+        self._link = link
+        self.stats = MigrationStats()
+        self._lock = threading.Lock()
+
+    @property
+    def table(self):
+        return self._image.metadata.page_table
+
+    def fetch_pages(self, first_page: int, n_pages: int) -> np.ndarray:
+        """Copy a page span out of the pool (the unit of transfer)."""
+        delay = self._link.delay_for(n_pages * self.table.page_size)
+        if delay > 0:
+            time.sleep(delay)
+        pages = np.array(self._image.store[first_page: first_page + n_pages])  # real copy
+        with self._lock:
+            self.stats.requests += 1
+            self.stats.pages_transferred += n_pages
+            self.stats.bytes_transferred += pages.nbytes
+        return pages
+
+
+class RestoredImage:
+    """Container-side restored dependency: leaves materialize through the chosen
+    policy; ``wait_all()`` blocks until the image is fully resident."""
+
+    def __init__(self, metadata: ImageMetadata, server: PageServer, treedef,
+                 policy: RestorePolicy):
+        self.metadata = metadata
+        self.treedef = treedef
+        self.policy = policy
+        self._server = server
+        self._table = metadata.page_table
+        self._local: Dict[str, np.ndarray] = {}   # leaf key -> materialized array
+        self._events: Dict[str, threading.Event] = {k: threading.Event()
+                                                    for k in self._table.order}
+        self._stream_thread: Optional[threading.Thread] = None
+        self._streaming_started = False
+        self.stats = server.stats
+
+    # -- internals ---------------------------------------------------------------
+    def _install_leaf(self, key: str) -> None:
+        e = self._table.entries[key]
+        pages = self._server.fetch_pages(e.first_page, e.n_pages)
+        raw = pages.reshape(-1)[: e.nbytes]
+        dt = np.dtype(e.dtype) if e.dtype != "bfloat16" else None
+        if dt is None:
+            import ml_dtypes
+            dt = np.dtype(ml_dtypes.bfloat16)
+        self._local[key] = np.frombuffer(raw.tobytes(), dtype=dt).reshape(e.shape)
+        self._events[key].set()
+
+    def _stream_all(self, skip: Sequence[str] = ()) -> None:
+        t0 = time.perf_counter()
+        for key in self._table.order:      # layer order == execution order
+            if key in skip or self._events[key].is_set():
+                continue
+            self._install_leaf(key)
+        self.stats.stream_s += time.perf_counter() - t0
+
+    def _start_background_stream(self, skip: Sequence[str] = ()) -> None:
+        if self._streaming_started:
+            return
+        self._streaming_started = True
+        self._stream_thread = threading.Thread(
+            target=self._stream_all, args=(tuple(skip),), daemon=True)
+        self._stream_thread.start()
+
+    # -- the fault path ------------------------------------------------------------
+    def fault(self, key: str) -> np.ndarray:
+        """First touch of a leaf by the executing function (userfaultfd analogue)."""
+        if self._events[key].is_set():
+            return self._local[key]
+        self.stats.faults += 1
+        t0 = time.perf_counter()
+        if self.policy == RestorePolicy.LAZY:
+            self._install_leaf(key)
+        elif self.policy == RestorePolicy.BULK:
+            # first fault: fetch the faulting leaf synchronously, then stream the rest
+            self._install_leaf(key)
+            self._start_background_stream(skip=(key,))
+        else:
+            # NO_LAZY / NO_PAGESERVER should have pre-installed everything
+            self._events[key].wait()
+        self.stats.fault_wait_s += time.perf_counter() - t0
+        return self._local[key]
+
+    def wait_all(self) -> None:
+        if self.policy == RestorePolicy.BULK:
+            self._start_background_stream()
+            if self._stream_thread is not None:
+                self._stream_thread.join()
+        elif self.policy == RestorePolicy.LAZY:
+            for key in self._table.order:
+                self.fault(key)
+        # NO_LAZY / NO_PAGESERVER are already resident
+
+    def resident_fraction(self) -> float:
+        done = sum(1 for e in self._events.values() if e.is_set())
+        return done / max(len(self._events), 1)
+
+    def as_pytree(self) -> Any:
+        """Full parameter pytree (blocks until resident)."""
+        self.wait_all()
+        import jax
+        leaves = [self._local[k] for k in self._table.tree_order]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+class MigrationClient:
+    """Container-side orchestrator (paper Fig. 4c)."""
+
+    def __init__(self, link: LinkModel = LinkModel()):
+        self.link = link
+
+    def migrate(
+        self,
+        image: LiveDependencyImage,
+        policy: RestorePolicy = RestorePolicy.BULK,
+    ) -> RestoredImage:
+        """Step 1: metadata transfer. Step 2: page server attach. Step 3: restore
+        skeleton (lazy) — pages move on fault / in the background."""
+        # step 1 — metadata (small, synchronous; its cost is the communication phase)
+        md = image.metadata
+        delay = self.link.delay_for(md.nbytes())
+        if delay > 0:
+            time.sleep(delay)
+        # step 2 — page server bound to the image
+        server = PageServer(image, self.link)
+        restored = RestoredImage(md, server, image.treedef, policy)
+        # step 3 — policy-specific eager work
+        if policy == RestorePolicy.NO_LAZY:
+            restored._stream_all()            # all pages through the server, upfront
+        elif policy == RestorePolicy.NO_PAGESERVER:
+            # whole-image copy (one giant request), then local restore
+            pages = server.fetch_pages(0, md.page_table.n_pages)
+            for key in md.page_table.order:
+                e = md.page_table.entries[key]
+                raw = pages[e.first_page: e.first_page + e.n_pages].reshape(-1)[: e.nbytes]
+                dt = np.dtype(e.dtype) if e.dtype != "bfloat16" else None
+                if dt is None:
+                    import ml_dtypes
+                    dt = np.dtype(ml_dtypes.bfloat16)
+                restored._local[key] = np.frombuffer(raw.tobytes(), dtype=dt).reshape(e.shape)
+                restored._events[key].set()
+        return restored

@@ -1,0 +1,78 @@
+"""Function registry: serverless endpoints = shared image ref + per-tenant handler.
+
+The paper's isolation argument (§1) holds by construction here: the dependency image
+contains only the *public* base model; user-specific state (the handler head weights
+and the handler callable) never enters the shared pool. What Prebaking would snapshot
+per function — base + handler together — the registry keeps factored.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class FunctionSpec:
+    fn_id: str
+    image_id: str                     # shared dependency image this endpoint needs
+    handler_builder: Callable[[], Dict[str, np.ndarray]]  # per-tenant weights (small)
+    handler_fn: Callable[..., Any]    # handler(params, handler_weights, request)
+    # provider-side artifacts
+    checkpoint_path: Optional[str] = None   # baseline path: full per-fn checkpoint
+    handler_bytes: int = 0
+    registered_at: float = field(default_factory=time.time)
+
+
+class FunctionRegistry:
+    def __init__(self, store_dir: Optional[str] = None):
+        self.store_dir = store_dir
+        self._fns: Dict[str, FunctionSpec] = {}
+
+    def register(
+        self,
+        fn_id: str,
+        image_id: str,
+        handler_builder: Callable[[], Dict[str, np.ndarray]],
+        handler_fn: Callable[..., Any],
+        *,
+        base_params_builder: Optional[Callable[[], Any]] = None,
+        write_baseline_checkpoint: bool = False,
+    ) -> FunctionSpec:
+        """Registering a function is the paper's *setup phase* (Fig. 4b): the user
+        uploads code + handler; the provider may also write the traditional full
+        per-function container checkpoint (what the Baseline cold start loads)."""
+        hw = handler_builder()
+        hbytes = sum(np.asarray(v).nbytes for v in hw.values())
+        ckpt = None
+        if write_baseline_checkpoint and self.store_dir and base_params_builder:
+            import jax
+            os.makedirs(self.store_dir, exist_ok=True)
+            ckpt = os.path.join(self.store_dir, f"{fn_id}.npz")
+            params = base_params_builder()
+            flat = {}
+            for i, l in enumerate(jax.tree_util.tree_leaves(params)):
+                arr = np.asarray(l)
+                if arr.dtype.name == "bfloat16":  # npz can't hold bf16: view as u16
+                    flat[f"p{i}:bf16"] = arr.view(np.uint16)
+                else:
+                    flat[f"p{i}"] = arr
+            flat.update({f"h_{k}": np.asarray(v) for k, v in hw.items()})
+            np.savez(ckpt, **flat)
+        spec = FunctionSpec(fn_id=fn_id, image_id=image_id,
+                            handler_builder=handler_builder, handler_fn=handler_fn,
+                            checkpoint_path=ckpt, handler_bytes=hbytes)
+        self._fns[fn_id] = spec
+        return spec
+
+    def get(self, fn_id: str) -> FunctionSpec:
+        return self._fns[fn_id]
+
+    def list(self) -> List[str]:
+        return sorted(self._fns)
+
+    def functions_sharing(self, image_id: str) -> List[str]:
+        return [f for f, s in self._fns.items() if s.image_id == image_id]

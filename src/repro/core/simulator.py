@@ -1,0 +1,125 @@
+"""Trace-driven fleet simulation: WarmSwap vs Prebaking vs Baseline (paper §4.5).
+
+Discrete-event simulation over per-function invocation traces:
+
+  * each function keeps at most one instance; an invocation within the keep-alive
+    window is a **warm start**, otherwise a **cold start** (the >99 % case the paper
+    scopes to, §2.2);
+  * cold-start latency comes from a per-method :class:`CostModel` — either measured
+    numbers produced by ``benchmarks/bench_coldstart.py`` on this machine, or the
+    paper's own Table 2 values for a paper-faithful simulation;
+  * memory accounting follows each method's structure: WarmSwap = one shared image
+    per *dependency* + per-function metadata/handler; Prebaking = one full snapshot
+    per *function*; Baseline = nothing resident.
+
+Outputs match Fig. 7: average latency per invocation-rate quartile + required cache
+memory, and the headline "X % memory saved when N functions share one image".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.keepalive import KeepAlivePolicy
+from repro.core.traces import Trace, quartile_groups
+
+
+@dataclass
+class CostModel:
+    """Per-method start latencies (seconds) and memory shapes."""
+    cold_warmswap_s: float
+    cold_prebaking_s: float
+    cold_baseline_s: float
+    warm_s: float
+    container_s: float = 0.5          # included for cold starts of BOTH methods (§4.5)
+    image_bytes: int = 230 << 20      # one shared dependency image (paper: 260 MB total
+    metadata_bytes: int = 3 << 20     #   = image + 10 x per-fn metadata, §4.5)
+    snapshot_bytes: int = 230 << 20   # one prebaked snapshot per function (~2.3 GB /10)
+
+    @classmethod
+    def paper_table2(cls) -> "CostModel":
+        """The paper's measured rnn_serving-class numbers (Table 2 / §4.5)."""
+        return cls(cold_warmswap_s=0.89, cold_prebaking_s=0.91, cold_baseline_s=2.2,
+                   warm_s=0.004)
+
+
+@dataclass
+class SimResult:
+    method: str
+    n_invocations: int
+    n_cold: int
+    n_warm: int
+    total_latency_s: float
+    memory_bytes: int
+    per_fn_latency: Dict[int, float] = field(default_factory=dict)
+    per_fn_invocations: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def avg_latency_s(self) -> float:
+        return self.total_latency_s / max(self.n_invocations, 1)
+
+
+def simulate(
+    traces: List[Trace],
+    method: str,                       # 'warmswap' | 'prebaking' | 'baseline'
+    cost: CostModel,
+    keep_alive: KeepAlivePolicy = KeepAlivePolicy(15.0),
+    shared_images: int = 1,            # distinct dependency images across the fleet
+) -> SimResult:
+    cold_latency = {
+        "warmswap": cost.cold_warmswap_s + cost.container_s,
+        "prebaking": cost.cold_prebaking_s + cost.container_s,
+        "baseline": cost.cold_baseline_s + cost.container_s,
+    }[method]
+
+    n_cold = n_warm = 0
+    total = 0.0
+    per_fn_lat: Dict[int, float] = {}
+    per_fn_n: Dict[int, int] = {}
+    for tr in traces:
+        expiry = -np.inf
+        lat_sum = 0.0
+        for t_min in tr.arrivals_min:
+            if t_min <= expiry:
+                n_warm += 1
+                lat = cost.warm_s
+            else:
+                n_cold += 1
+                lat = cold_latency
+            lat_sum += lat
+            # instance busy then kept alive from completion
+            expiry = t_min + lat / 60.0 + keep_alive.keep_alive_min
+        total += lat_sum
+        per_fn_lat[tr.fn_index] = lat_sum
+        per_fn_n[tr.fn_index] = len(tr.arrivals_min)
+
+    n_fns = len(traces)
+    memory = {
+        "warmswap": shared_images * cost.image_bytes + n_fns * cost.metadata_bytes,
+        "prebaking": n_fns * cost.snapshot_bytes,
+        "baseline": 0,
+    }[method]
+    return SimResult(method=method, n_invocations=n_cold + n_warm, n_cold=n_cold,
+                     n_warm=n_warm, total_latency_s=total, memory_bytes=memory,
+                     per_fn_latency=per_fn_lat, per_fn_invocations=per_fn_n)
+
+
+def quartile_latencies(traces: List[Trace], result: SimResult) -> Dict[str, float]:
+    """Fig. 7-left: average latency per invocation-rate quartile."""
+    groups = quartile_groups(traces)
+    out = {}
+    for name, members in groups.items():
+        lat = sum(result.per_fn_latency.get(t.fn_index, 0.0) for t in members)
+        n = sum(result.per_fn_invocations.get(t.fn_index, 0) for t in members)
+        out[name] = lat / max(n, 1)
+    return out
+
+
+def memory_saving_fraction(warmswap: SimResult, prebaking: SimResult) -> float:
+    """The paper's headline: WarmSwap saves ~88 % of warm-up memory for 10 functions
+    sharing one image."""
+    if prebaking.memory_bytes == 0:
+        return 0.0
+    return 1.0 - warmswap.memory_bytes / prebaking.memory_bytes

@@ -1,0 +1,178 @@
+"""FunctionBench-analogue workload suite (paper Table 1 / §4.1).
+
+Seven serverless function classes with the same *cost structure* as the paper's:
+
+  | paper fn          | dependency image            | our image (base model)        |
+  |-------------------|-----------------------------|-------------------------------|
+  | helloworld        | bare Python (8.1 MB)        | py-base  (~8 MB blob)         |
+  | json_dumps_load   | urllib/json (16 MB)         | py-base                       |
+  | pyaes             | pyaes (8.3 MB)              | py-base                       |
+  | chameleon         | chameleon (8.9 MB)          | py-base                       |
+  | lr_serving        | sklearn+pandas (79 MB)      | model-tiny  (~2 MB params)    |
+  | cnn_serving       | numpy+keras (190 MB)        | model-small (~16 MB params)   |
+  | rnn_serving       | numpy+torch (200 MB)        | model-medium (~70 MB params)  |
+
+Lightweight functions attach to the small shared runtime image (and therefore show the
+paper's Fig. 5a behaviour: WarmSwap's migration overhead isn't amortized); serving
+functions attach to progressively larger model images where dependency bring-up
+(deserialize + XLA compile) dominates the cold start, as in the paper's Fig. 3.
+
+Handlers are *real* computations (json round-trips, XOR block cipher rounds, HTML
+table rendering, model prefill + classification head), so the execution phase is
+measured, not simulated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig, GLOBAL_ATTN
+from repro.models.transformer import forward, init_params
+
+SERVE_BATCH = 1
+SERVE_SEQ = 64
+
+
+def _model_cfg(name: str, d: int, layers: int, vocab: int, ff_mult: int = 4) -> ArchConfig:
+    return ArchConfig(
+        name=name, family="dense", n_layers=layers, d_model=d,
+        n_heads=max(d // 64, 1), n_kv_heads=max(d // 128, 1), d_ff=ff_mult * d,
+        vocab_size=vocab, head_dim=64, attn_pattern=(GLOBAL_ATTN,),
+        mlp="swiglu", tie_embeddings=True, max_seq_len=4096)
+
+
+# The three model images (image id -> arch config)
+IMAGE_CONFIGS: Dict[str, ArchConfig] = {
+    "model-tiny": _model_cfg("model-tiny", 128, 2, 1024),
+    "model-small": _model_cfg("model-small", 256, 4, 4096),
+    "model-medium": _model_cfg("model-medium", 512, 8, 8192),
+}
+PY_BASE_BYTES = 8 << 20   # bare-runtime image blob size (paper: 8.1 MB)
+
+
+def py_base_builder() -> Dict[str, np.ndarray]:
+    """The 'bare Python runtime' image: an opaque pre-initialized blob."""
+    rng = np.random.default_rng(0)
+    return {"runtime_blob": rng.integers(0, 255, PY_BASE_BYTES, dtype=np.uint8)}
+
+
+def model_params_builder(image_id: str, seed: int = 0) -> Callable[[], Any]:
+    cfg = IMAGE_CONFIGS[image_id]
+    def build():
+        return init_params(jax.random.PRNGKey(seed), cfg, jnp.bfloat16)
+    return build
+
+
+def make_model_executables(image_id: str) -> Dict[str, Any]:
+    """The image's pre-built executables (XLA-compile analogue of pre-imported
+    middleware). Fresh wrappers of the same fns = the Baseline's per-cold-start
+    compile."""
+    cfg = IMAGE_CONFIGS[image_id]
+
+    @jax.jit
+    def prefill_logits(params, tokens):
+        logits, _, _ = forward(params, tokens, cfg, logits_slice=1)
+        return logits[:, -1]
+
+    return {"prefill_logits": prefill_logits}
+
+
+def warm_executables(execs: Dict[str, Any], params: Any, image_id: str) -> None:
+    """Trigger compilation (used once at image build; the Baseline pays this per
+    cold start)."""
+    cfg = IMAGE_CONFIGS[image_id]
+    tokens = jnp.zeros((SERVE_BATCH, SERVE_SEQ), jnp.int32)
+    jax.block_until_ready(execs["prefill_logits"](params, tokens))
+
+
+# ---------------------------------------------------------------------------------
+# Handlers (the user code; never part of the shared image)
+# ---------------------------------------------------------------------------------
+
+def _head_builder(image_id: Optional[str], n_classes: int = 16, seed: int = 1):
+    def build() -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        if image_id is None or image_id == "py-base":
+            return {"bias": rng.normal(size=(n_classes,)).astype(np.float32)}
+        d = IMAGE_CONFIGS[image_id].d_model
+        vp = ((IMAGE_CONFIGS[image_id].vocab_size + 511) // 512) * 512
+        return {"w": (rng.normal(size=(vp, n_classes)) / np.sqrt(d)).astype(np.float32),
+                "bias": np.zeros((n_classes,), np.float32)}
+    return build
+
+
+def handler_helloworld(params, hw, request, execs):
+    return "hello world"
+
+
+def handler_json(params, hw, request, execs):
+    doc = {"items": [{"i": i, "v": float(i) * 1.5, "s": "x" * 32} for i in range(2000)]}
+    for _ in range(5):
+        doc = json.loads(json.dumps(doc))
+    return len(json.dumps(doc))
+
+
+def handler_pyaes(params, hw, request, execs):
+    rng = np.random.default_rng(42)
+    data = rng.integers(0, 255, 100_000, dtype=np.uint8)
+    key = rng.integers(0, 255, 16, dtype=np.uint8)
+    for r in range(10):                       # XOR block-cipher rounds (pyaes analogue)
+        data = np.bitwise_xor(data, np.roll(np.resize(key, data.shape), r))
+        data = np.roll(data, 7)
+    return int(data.sum())
+
+
+def handler_chameleon(params, hw, request, execs):
+    rows = ["<tr>" + "".join(f"<td>{i}-{j}</td>" for j in range(10)) + "</tr>"
+            for i in range(1500)]
+    table = "<table>" + "".join(rows) + "</table>"
+    return len(table)
+
+
+def _handler_serving(params, hw, request, execs):
+    tokens = jnp.asarray(request["tokens"], jnp.int32)
+    logits = execs["prefill_logits"](params, tokens)          # (B, Vp)
+    cls = jnp.argmax(logits @ jnp.asarray(hw["w"]) + hw["bias"], axis=-1)
+    return np.asarray(cls)
+
+
+@dataclass
+class Workload:
+    fn_id: str
+    image_id: str
+    handler_fn: Callable
+    handler_builder: Callable
+    request_builder: Callable[[], Any]
+    # leaves the handler actually touches (LAZY restore transfers only these;
+    # None = the whole image, the common case)
+    touch_keys: Optional[List[str]] = None
+
+
+def default_request():
+    rng = np.random.default_rng(7)
+    return {"tokens": rng.integers(0, 1000, (SERVE_BATCH, SERVE_SEQ), dtype=np.int32)}
+
+
+WORKLOADS: Dict[str, Workload] = {
+    "helloworld": Workload("helloworld", "py-base", handler_helloworld,
+                           _head_builder(None), lambda: {}),
+    "json_dumps_load": Workload("json_dumps_load", "py-base", handler_json,
+                                _head_builder(None), lambda: {}),
+    "pyaes": Workload("pyaes", "py-base", handler_pyaes,
+                      _head_builder(None), lambda: {}),
+    "chameleon": Workload("chameleon", "py-base", handler_chameleon,
+                          _head_builder(None), lambda: {}),
+    "lr_serving": Workload("lr_serving", "model-tiny", _handler_serving,
+                           _head_builder("model-tiny"), default_request),
+    "cnn_serving": Workload("cnn_serving", "model-small", _handler_serving,
+                            _head_builder("model-small"), default_request),
+    "rnn_serving": Workload("rnn_serving", "model-medium", _handler_serving,
+                            _head_builder("model-medium"), default_request),
+}

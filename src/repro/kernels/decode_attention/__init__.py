@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,119 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams HBM->VMEM once per
+step), so the kernel's job is to keep that stream dense: grid ``(B, Hkv, n_kv_blocks)``
+with the kv axis innermost/sequential, online-softmax scratch carried in VMEM, and all
+``g = H/Hkv`` grouped query heads processed per kv block (GQA means each cache block
+is reused g times from VMEM — the only reuse available in decode).
+
+Ring-buffer semantics are handled by the ``valid`` mask input, computed in O(S) by the
+wrapper from slot positions — the kernel itself is layout-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -2.0e38
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(
+    q_ref,                   # (1, 1, g, d)
+    k_ref, v_ref,            # (1, 1, bk, d)
+    valid_ref,               # (1, bk) int32 (bool as int)
+    o_ref,                   # (1, 1, g, d)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    softcap: Optional[float],
+    n_kv_blocks: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (g, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[0] != 0                        # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (g, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scratch[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scratch[...] = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scratch[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scratch[...] /
+                       jnp.maximum(l_scratch[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,            # (B, H, d)
+    k_cache: jax.Array,      # (B, Hkv, S, d)
+    v_cache: jax.Array,
+    valid: jax.Array,        # (S,) bool
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, d = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    block_k = max(8, min(block_k, S))
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    Sp = k_cache.shape[2]
+    n_kv = Sp // block_k
+    qg = q.reshape(B, Hkv, g, d)
+    valid_i = valid.astype(jnp.int32)[None]          # (1, Sp)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap,
+                               n_kv_blocks=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid_i)
+    return out.reshape(B, H, d)

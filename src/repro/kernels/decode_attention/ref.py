@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for single-token flash decode over a (ring) KV cache."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, d) — the one new token's queries
+    k_cache: jax.Array,      # (B, Hkv, S, d)
+    v_cache: jax.Array,      # (B, Hkv, S, d)
+    valid: jax.Array,        # (S,) bool — slot validity mask (ring/window aware)
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, d = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, Hkv, g, d)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.diag_recurrence.ops import diag_recurrence
+from repro.kernels.diag_recurrence.ref import diag_recurrence_ref
+
+__all__ = ["diag_recurrence", "diag_recurrence_ref"]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the chunked diagonal linear recurrence kernel.
+
+Same contract as ``repro.models.recurrence.chunked_diag_recurrence`` restricted to
+2-D channel layout: h_t = a_t * h_{t-1} + b_t, a/b: (B, S, C), h0: (B, C).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def diag_recurrence_ref(a: jax.Array, b: jax.Array, h0: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h_final, h_all = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(h_all, 0, 1), h_final

@@ -1,0 +1,144 @@
+"""Pallas TPU flash attention: blockwise online-softmax with VMEM tiling.
+
+Grid layout ``(B, H, n_q_blocks, n_kv_blocks)``; the kv-block axis is the innermost,
+sequential ('arbitrary') dimension, carrying the running max / denominator / output
+accumulator in VMEM scratch — the standard TPU flash schedule. Supports:
+
+  * causal and non-causal attention,
+  * sliding windows (gemma2 local layers, danube3 SWA, recurrentgemma local),
+  * attention-logit softcapping (gemma2),
+  * GQA via the kv-head index map (no KV replication in memory).
+
+Block sizes default to (128, 128): MXU-aligned on the contraction dims, and the
+working set (q/k/v blocks in bf16 + fp32 scratch: 3·128·d·2B + 2·128·128·4B ≈ 0.3 MB
+for d = 128) fits far inside the ~16 MB/core VMEM budget, leaving room for
+double-buffered block prefetch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -2.0e38
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # VMEM blocks
+    o_ref,                          # output block
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_q: int,
+    block_k: int,
+    seq_k: int,                     # true (unpadded) kv length
+    n_kv_blocks: int,
+):
+    i = pl.program_id(2)            # q block index
+    j = pl.program_id(3)            # kv block index (innermost, sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)             # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_idx < seq_k
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+    acc_scratch[...] = acc
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scratch[...] /
+                       jnp.maximum(l_scratch[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,            # (B, H, Sq, d)
+    k: jax.Array,            # (B, Hkv, Sk, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    block_q = max(8, min(block_q, Sq))
+    block_k = max(8, min(block_k, Sk))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = q.shape[2], k.shape[2]
+    n_q, n_kv = Sq_p // block_q, Sk_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, seq_k=Sk, n_kv_blocks=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

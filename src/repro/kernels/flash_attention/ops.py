@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+``flash_attention(...)`` dispatches to the Pallas kernel on TPU and to interpret mode
+elsewhere (this container is CPU-only; interpret mode executes the kernel body
+faithfully for validation). The reference semantics live in ``ref.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, d)
+    k: jax.Array,            # (B, Hkv, Sk, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interp)

@@ -1,0 +1,4 @@
+from repro.kernels.page_gather.ops import page_gather
+from repro.kernels.page_gather.ref import page_gather_ref
+
+__all__ = ["page_gather", "page_gather_ref"]

@@ -1,0 +1,48 @@
+"""Pallas TPU paged-gather: assemble contiguous weights from pooled pages.
+
+The device-side hot path of WarmSwap restore: the dependency pool keeps parameter
+pages in a big HBM buffer shared by all tenants; instance bring-up gathers each
+tenant's page list into its contiguous parameter buffers. This is pure data movement,
+so the kernel is shaped around the DMA engine: grid ``(K,)`` over destination pages,
+with the *scalar-prefetched* page-id list driving the input index map — the DMA for
+page i+1 issues while page i copies (double buffering), sustaining HBM bandwidth.
+
+Scalar prefetch (``pltpu.PrefetchScalarGridSpec``) is exactly the TPU idiom for this
+"pointer-chase then stream" pattern (same as paged attention's block tables).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _gather_kernel(page_ids_ref, pool_ref, out_ref):
+    # pool_ref block was selected by the index map via the prefetched page id;
+    # the body is a VMEM->VMEM copy.
+    out_ref[...] = pool_ref[...]
+
+
+def page_gather_pallas(
+    pool: jax.Array,         # (P, E)
+    page_ids: jax.Array,     # (K,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    P, E = pool.shape
+    K = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, E), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, E), pool.dtype),
+        interpret=interpret,
+    )(page_ids, pool)

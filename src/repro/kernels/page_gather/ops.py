@@ -1,0 +1,18 @@
+"""Jitted public wrapper for the paged-gather kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.page_gather.kernel import page_gather_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool: jax.Array, page_ids: jax.Array, *, interpret=None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return page_gather_pallas(pool, page_ids, interpret=interp)

@@ -1,0 +1,87 @@
+"""Multi-host / multi-pod process bootstrap for the production meshes.
+
+On a real v5e fleet every host runs the same binary; this module provides the
+per-process initialization that the dry-run stands in for:
+
+    python -m repro.launch.cluster --role train --arch gemma2_27b ...
+
+  * ``jax.distributed.initialize`` from environment (COORDINATOR_ADDRESS,
+    NUM_PROCESSES, PROCESS_ID — set by the scheduler; GKE/TPU-VM metadata is
+    auto-detected by jax when unset);
+  * builds the production mesh across all processes' devices
+    (``make_production_mesh`` — the same function the dry-run compiles against,
+    so dry-run artifacts predict the real launch);
+  * host-sharded data: each process generates only its slice
+    (``SyntheticTokenPipeline(host_index=process_index, host_count=process_count)``);
+  * checkpoint directory must be shared storage (GCS/NFS); restores re-shard to the
+    current mesh, so the job may resume at a different pod count (elastic restart —
+    see tests/test_elastic.py for the single-host proof).
+
+``scripts/launch_pod.sh`` shows the per-host invocation for a 2-pod (512-chip) job.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def initialize_distributed() -> tuple:
+    """Returns (process_index, process_count). Single-process when no coordinator."""
+    import jax
+    coord = os.environ.get("COORDINATOR_ADDRESS")
+    nproc = os.environ.get("NUM_PROCESSES")
+    if coord and nproc:
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=int(nproc),
+            process_id=int(os.environ.get("PROCESS_ID", "0")),
+        )
+    elif os.environ.get("TPU_WORKER_HOSTNAMES"):
+        jax.distributed.initialize()  # TPU-VM metadata autodetection
+    return jax.process_index(), jax.process_count()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", choices=["train", "serve", "dryrun"], default="train")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default="fnbench_tiny")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=os.environ.get("CKPT_DIR",
+                                                         "results/cluster_ckpt"))
+    args, passthrough = ap.parse_known_args()
+
+    pid, pcount = initialize_distributed()
+    import jax
+    print(f"[cluster] process {pid}/{pcount}, "
+          f"{jax.local_device_count()} local / {jax.device_count()} global devices")
+
+    if args.role == "dryrun":
+        from repro.launch.dryrun import main as dryrun_main
+        import sys
+        sys.argv = ["dryrun"] + passthrough
+        dryrun_main()
+        return
+
+    from repro.launch.mesh import make_production_mesh, make_local_mesh
+    try:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    except RuntimeError:
+        mesh = make_local_mesh()  # smaller fleets: whatever is attached
+    print(f"[cluster] mesh: {dict(mesh.shape)}")
+
+    if args.role == "train":
+        import sys
+        sys.argv = (["train", "--arch", args.arch, "--steps", str(args.steps),
+                     "--ckpt-dir", args.ckpt_dir, "--resume"] + passthrough)
+        from repro.launch.train import main as train_main
+        train_main()
+    else:
+        import sys
+        sys.argv = ["serve", "--arch", args.arch, "--reduced"] + passthrough
+        from repro.launch.serve import main as serve_main
+        serve_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,381 @@
+"""Trip-count-aware HLO analysis.
+
+``compiled.cost_analysis()`` counts each ``while`` body exactly once, so any program
+built on scan-over-layers (every model here) under-reports flops/bytes/collectives by
+the trip count (verified: a 10-iteration scanned matmul reports 1/10th the unrolled
+flops). This module re-derives the three roofline inputs by walking the optimized
+(post-SPMD, per-device) HLO text:
+
+  * every computation is parsed and every named value typed;
+  * per computation: dot/convolution FLOPs (from result shape x contracting dims),
+    an HBM-traffic proxy (operand + result bytes of top-level ops — a fusion counts
+    its parameters/results once, matching the "stream each fusion operand once"
+    model of HBM traffic), and collective output bytes by kind;
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` in
+    optimized HLO — body costs are multiplied by exactly that (nested scans compose:
+    layer scan x attention-chunk scan x recurrence chunks);
+  * fusion/call/reduce subcomputations contribute FLOPs and collectives (not bytes —
+    their internals are on-chip).
+
+Approximations (documented in EXPERIMENTS.md §Roofline): elementwise FLOPs ignored
+(dot/conv dominate at these shapes); byte counts use full operand type sizes EXCEPT
+for in-place slice ops — a fusion parameter consumed only by ``dynamic-slice`` is
+charged the slice size, and a ``dynamic-update-slice``-rooted fusion is charged
+2x the update size instead of the whole aliased buffer (matching XLA's in-place
+update semantics; without this, every scan-carried KV-cache write would be charged
+the full stacked cache per layer); all-reduce ring traffic is weighted 2x in the
+collective term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e3m4": 1, "f8e4m3": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "copy-start", "copy-done", "partition-id", "replica-id",
+             "opt-barrier"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str) if dt in _DTYPE_BYTES]
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Call:
+    kind: str      # 'while' | 'sub'
+    callee: str
+    trips: int = 1
+
+
+@dataclass
+class _Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    calls: List[_Call] = field(default_factory=list)
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _COMP_HDR_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _dot_flops(op_type: str, rest: str, types: Dict[str, str]) -> float:
+    res = _shape_dims(op_type)
+    if not res:
+        return 0.0
+    n_res = 1
+    for d in res[0][1]:
+        n_res *= d
+    operands = _OPERAND_RE.findall(rest.split(")", 1)[0])
+    if not operands or operands[0] not in types:
+        return 0.0
+    lhs_dims = _shape_dims(types[operands[0]])
+    if not lhs_dims:
+        return 0.0
+    contract = 1
+    m = _CONTRACT_RE.search(rest)
+    if m:
+        for ci in (int(c) for c in m.group(1).split(",") if c):
+            if ci < len(lhs_dims[0][1]):
+                contract *= lhs_dims[0][1][ci]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(op_type: str, rest: str, types: Dict[str, str]) -> float:
+    res = _shape_dims(op_type)
+    operands = _OPERAND_RE.findall(rest.split(")", 1)[0])
+    if not res or len(operands) < 2 or operands[1] not in types:
+        return 0.0
+    n_res = 1
+    for d in res[0][1]:
+        n_res *= d
+    kd = _shape_dims(types[operands[1]])
+    if not kd:
+        return 0.0
+    n_k = 1
+    for d in kd[0][1]:
+        n_k *= d
+    out_ch = kd[0][1][-1] if kd[0][1] else 1
+    return 2.0 * n_res * max(n_k // max(out_ch, 1), 1)
+
+
+_COLLECT_TOP = False
+_TOP_SINK: List[tuple] = []
+
+
+def top_byte_contributors(text: str, n: int = 15) -> List[tuple]:
+    """(bytes_with_trips, trips, opcode, name, type) — sorted desc, using the same
+    in-place-aware accounting as analyze_module."""
+    global _COLLECT_TOP, _TOP_SINK
+    _COLLECT_TOP, _TOP_SINK = True, []
+    try:
+        analyze_module(text)
+    finally:
+        _COLLECT_TOP = False
+    out = sorted(_TOP_SINK, reverse=True)[:n]
+    _TOP_SINK = []
+    return out
+
+
+def analyze_module(text: str) -> Dict[str, object]:
+    comps, entry = _split_computations(text)
+
+    types: Dict[str, str] = {}
+    raw_ops: Dict[str, List[Tuple[str, str, str, str]]] = {}
+    for cname, lines in comps.items():
+        ops = []
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            types[name] = type_str
+            ops.append((name, type_str, opcode, rest))
+        raw_ops[cname] = ops
+
+    # --- in-place slice attribution helpers --------------------------------------
+    def _fused_comp_info(comp: str):
+        """(param_name->index, ops) for a fused computation."""
+        params = {}
+        for name, type_str, opcode, rest in raw_ops.get(comp, ()):
+            if opcode == "parameter":
+                m = re.match(r"(\d+)\)", rest)
+                if m:
+                    params[name] = int(m.group(1))
+        return params, raw_ops.get(comp, ())
+
+    def _fusion_bytes(rest: str, result_b: float, operand_names) -> float:
+        """Byte cost of a fusion, charging slice-sized traffic for params that are
+        only dynamic-sliced and DUS-rooted fusions (in-place updates)."""
+        m = _CALLS_RE.search(rest)
+        if not m or m.group(1) not in raw_ops:
+            return result_b + sum(_type_bytes(types[o]) for o in operand_names
+                                  if o in types)
+        params, fops = _fused_comp_info(m.group(1))
+        # follow unary pass-through chains (convert/copy/bitcast/reshape/transpose/
+        # broadcast) so a DUS/DS consuming convert(param) still resolves to the param
+        _PASS = {"convert", "copy", "bitcast", "reshape", "transpose", "broadcast"}
+        alias = dict(params)                      # value name -> source param index
+        local_types = dict(types)
+        sliced_params = {}       # param index -> slice bytes
+        dus_targets = set()      # param indices used as in-place update targets
+        dus_update_b = 0.0
+        has_dus = False
+        for name, type_str, opcode, frest in fops:
+            local_types[name] = type_str
+            ops_in = _OPERAND_RE.findall(frest.split("),", 1)[0])
+            if opcode in _PASS and len(ops_in) == 1 and ops_in[0] in alias:
+                alias[name] = alias[ops_in[0]]
+            if opcode == "dynamic-slice" and ops_in and ops_in[0] in alias:
+                idx = alias[ops_in[0]]
+                sliced_params[idx] = max(sliced_params.get(idx, 0.0),
+                                         _type_bytes(type_str))
+            if opcode in ("dynamic-update-slice", "scatter") and len(ops_in) >= 2:
+                has_dus = True
+                if ops_in[0] in alias:
+                    dus_targets.add(alias[ops_in[0]])
+                upd = ops_in[-1] if opcode == "scatter" else ops_in[1]
+                dus_update_b += _type_bytes(local_types.get(upd, ""))
+        total = 0.0
+        for i, oname in enumerate(operand_names):
+            if oname not in types:
+                continue
+            full = _type_bytes(types[oname])
+            if i in sliced_params:
+                total += min(sliced_params[i], full)
+            elif has_dus and i in dus_targets:
+                total += min(dus_update_b, full)     # read-modify region only
+            else:
+                total += full
+        total += min(dus_update_b, result_b) if has_dus else result_b
+        return total
+
+    costs: Dict[str, _Cost] = {}
+    for cname, ops in raw_ops.items():
+        c = _Cost()
+        for name, type_str, opcode, rest in ops:
+            if opcode in _SKIP_OPS:
+                continue
+            base = opcode.replace("-start", "")
+            result_b = _type_bytes(type_str)
+            operand_names = [o for o in _OPERAND_RE.findall(rest.split("),", 1)[0])]
+            operand_b = sum(_type_bytes(types[o]) for o in operand_names
+                            if o in types)
+            if opcode.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                c.coll_bytes[base] += result_b
+                c.coll_count[base] += 1
+                c.bytes += result_b + operand_b
+                continue
+            if opcode == "while":
+                body = _BODY_RE.search(rest)
+                trips_m = _TRIP_RE.search(rest)
+                trips = int(trips_m.group(1)) if trips_m else 1
+                if body and body.group(1) in raw_ops:
+                    c.calls.append(_Call("while", body.group(1), trips))
+                continue
+            if opcode == "dot":
+                c.flops += _dot_flops(type_str, rest, types)
+                c.bytes += result_b + operand_b
+                continue
+            if opcode == "convolution":
+                c.flops += _conv_flops(type_str, rest, types)
+                c.bytes += result_b + operand_b
+                continue
+            # subcomputations: flops/collectives propagate, bytes don't
+            for m2 in _CALLS_RE.finditer(rest):
+                if m2.group(1) in raw_ops:
+                    c.calls.append(_Call("sub", m2.group(1), 1))
+            bm = _BRANCH_RE.search(rest)
+            if bm:
+                for b in re.split(r",\s*", bm.group(1)):
+                    b = b.strip().lstrip("%")
+                    if b in raw_ops:
+                        c.calls.append(_Call("sub", b, 1))
+            if opcode == "fusion":
+                c.bytes += _fusion_bytes(rest, result_b, operand_names)
+            elif opcode == "dynamic-slice":
+                c.bytes += 2 * result_b                    # read slice + write result
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                upd = (operand_names[-1] if opcode == "scatter"
+                       else operand_names[1]) if len(operand_names) > 1 else None
+                ub = _type_bytes(types.get(upd, "")) if upd else result_b
+                c.bytes += 3 * ub                          # read region+update, write
+            else:
+                c.bytes += result_b + operand_b
+        costs[cname] = c
+
+    from functools import lru_cache
+
+    @lru_cache(maxsize=None)
+    def total(cname: str) -> Tuple[float, float, tuple, tuple]:
+        c = costs[cname]
+        f, b = c.flops, c.bytes
+        coll = dict(c.coll_bytes)
+        cnt = dict(c.coll_count)
+        for call in c.calls:
+            cf, cb, ccoll, ccnt = total(call.callee)
+            f += call.trips * cf
+            if call.kind == "while":
+                b += call.trips * cb
+            for k, v in dict(ccoll).items():
+                coll[k] = coll.get(k, 0.0) + call.trips * v
+            for k, v in dict(ccnt).items():
+                cnt[k] = cnt.get(k, 0) + call.trips * v
+        return f, b, tuple(sorted(coll.items())), tuple(sorted(cnt.items()))
+
+    # optional per-op attribution (profiling aid for the perf loop)
+    if _COLLECT_TOP:
+        mults: Dict[str, int] = {entry or "": 1}
+        stack = [entry] if entry else []
+        while stack:
+            cn = stack.pop()
+            for name, t, code, rest in raw_ops.get(cn, ()):
+                if code == "while":
+                    bm_ = _BODY_RE.search(rest)
+                    tm_ = _TRIP_RE.search(rest)
+                    if bm_ and bm_.group(1) in raw_ops:
+                        mults[bm_.group(1)] = (mults.get(bm_.group(1), 0)
+                                               + mults[cn] * (int(tm_.group(1))
+                                                              if tm_ else 1))
+                        stack.append(bm_.group(1))
+        for cn, m in mults.items():
+            for name, t, code, rest in raw_ops.get(cn, ()):
+                if code in _SKIP_OPS or code.endswith("-done") or code == "while":
+                    continue
+                operand_names = [o for o in
+                                 _OPERAND_RE.findall(rest.split("),", 1)[0])]
+                rb = _type_bytes(t)
+                if code == "fusion":
+                    b = _fusion_bytes(rest, rb, operand_names)
+                elif code in ("dynamic-update-slice", "scatter"):
+                    upd = (operand_names[-1] if code == "scatter"
+                           else operand_names[1]) if len(operand_names) > 1 else None
+                    b = 3 * (_type_bytes(types.get(upd, "")) if upd else rb)
+                elif code == "dynamic-slice":
+                    b = 2 * rb
+                else:
+                    b = rb + sum(_type_bytes(types[o]) for o in operand_names
+                                 if o in types)
+                _TOP_SINK.append((m * b, m, code, name, t[:60]))
+
+    if entry is None or entry not in costs:
+        entry = max(raw_ops, key=lambda k: len(raw_ops[k])) if raw_ops else ""
+    if not entry:
+        return {"flops": 0.0, "bytes": 0.0, "collective_output_bytes": 0.0,
+                "collective_ring_weighted_bytes": 0.0,
+                "collective_bytes_by_kind": {}, "collective_count_by_kind": {},
+                "n_computations": 0}
+
+    f, b, coll_t, cnt_t = total(entry)
+    coll = dict(coll_t)
+    cnt = dict(cnt_t)
+    total_coll = sum(coll.values())
+    return {
+        "flops": float(f),
+        "bytes": float(b),
+        "collective_bytes_by_kind": {k: float(v) for k, v in coll.items()},
+        "collective_count_by_kind": {k: int(v) for k, v in cnt.items()},
+        "collective_output_bytes": float(total_coll),
+        "collective_ring_weighted_bytes": float(total_coll +
+                                                coll.get("all-reduce", 0.0)),
+        "n_computations": len(raw_ops),
+    }

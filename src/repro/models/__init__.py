@@ -1,0 +1,12 @@
+from repro.models.config import ArchConfig, ShapeConfig, SHAPES
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+)
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES",
+    "decode_step", "forward", "init_decode_state", "init_params",
+]

@@ -1,0 +1,186 @@
+"""Model-level step functions: loss / train_step / prefill / serve_step.
+
+These are the functions the launchers jit with explicit shardings, and the functions
+the dry-run lowers for every (arch x shape) cell:
+
+  * ``train_4k``    -> ``make_train_step(cfg)``   (fwd+bwd+AdamW)
+  * ``prefill_32k`` -> ``make_prefill_step(cfg)`` (fwd, builds decode state)
+  * ``decode_32k`` / ``long_500k`` -> ``make_serve_step(cfg)`` (one token + cache)
+
+Cross-entropy is computed **chunked over the sequence** (re-materializing one logit
+chunk (B, c, V/tp) at a time) so the full (B, S, V) fp32 logits never exist — with a
+256k padded vocab that single tensor would otherwise dominate HBM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import padded_vocab, unembed
+from repro.models.transformer import decode_step, forward, init_decode_state, init_params
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+# ---------------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------------
+
+def _ce_from_logits(logits: jax.Array, targets: jax.Array, vocab_size: int):
+    """logits (B, C, Vp) fp32; targets (B, C) int32; returns (sum_ce, sum_zloss)."""
+    vp = logits.shape[-1]
+    if vp > vocab_size:  # mask padded vocab rows out of the softmax
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(jnp.arange(vp) < vocab_size, logits, neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(lse - gold)
+    zloss = jnp.sum(jnp.square(lse))
+    return ce, zloss
+
+
+def chunked_cross_entropy(
+    embed_params: dict,
+    feats: jax.Array,        # (B, S, D) post-final-norm features
+    targets: jax.Array,      # (B, S) int32
+    cfg: ArchConfig,
+    *,
+    chunk: int = 512,
+    z_loss_coef: float = 1e-4,
+) -> jax.Array:
+    B, S, D = feats.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    n = feats.shape[1] // C
+    fc = feats.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, C).transpose(1, 0, 2)
+    mask = (jnp.arange(n * C).reshape(n, C)[:, None, :] < S)  # (n, 1, C) valid positions
+
+    @jax.checkpoint
+    def chunk_loss(args):
+        f, t, m = args
+        logits = unembed(embed_params, f, cfg)
+        vp = logits.shape[-1]
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, neg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - gold) * m)
+        zl = jnp.sum(jnp.square(lse) * m)
+        return ce + z_loss_coef * zl
+
+    losses = jax.lax.map(chunk_loss, (fc, tc, mask.astype(jnp.float32)))
+    return jnp.sum(losses) / (B * S)
+
+
+# ---------------------------------------------------------------------------------
+# Batch plumbing (modality frontends are stubs per the assignment)
+# ---------------------------------------------------------------------------------
+
+def frontend_embeds_from_batch(batch: Dict[str, jax.Array], cfg: ArchConfig):
+    if cfg.frontend == "audio_frames":
+        return batch["frames"]
+    if cfg.frontend == "vision_patches":
+        return batch["patches"]
+    return None
+
+
+def loss_fn(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    *,
+    remat: str = "unit",
+    q_chunk: int = 512,
+    rec_chunk: int = 256,
+    ce_chunk: int = 512,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    fe = frontend_embeds_from_batch(batch, cfg)
+    feats, aux, _ = forward(
+        params, tokens, cfg, frontend_embeds=fe, make_state=False,
+        remat=remat, q_chunk=q_chunk, rec_chunk=rec_chunk, return_features=True)
+    n_front = 0 if (cfg.is_encoder_decoder or fe is None) else fe.shape[1]
+    if n_front > 0:
+        # feats index F-1+i predicts token i
+        pred = feats[:, n_front - 1:-1]
+        targets = tokens
+    else:
+        pred = feats[:, :-1]
+        targets = tokens[:, 1:]
+    ce = chunked_cross_entropy(params["embed"], pred, targets, cfg, chunk=ce_chunk)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------------
+
+def make_train_step(
+    cfg: ArchConfig,
+    *,
+    adamw: AdamWConfig = AdamWConfig(),
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    remat: str = "unit",
+    q_chunk: int = 512,
+    rec_chunk: int = 256,
+) -> Callable:
+    def train_step(params, opt_state, batch, step):
+        (loss, parts), grads = jax.value_and_grad(
+            partial(loss_fn, cfg=cfg, remat=remat, q_chunk=q_chunk, rec_chunk=rec_chunk),
+            has_aux=True)(params, batch)
+        lr = cosine_schedule(step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+                             total_steps=total_steps)
+        params, opt_state, om = adamw_update(grads, opt_state, params, lr, adamw)
+        metrics = {"loss": loss, "lr": lr, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, state_len: Optional[int] = None,
+                      q_chunk: int = 512, rec_chunk: int = 256) -> Callable:
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        fe = frontend_embeds_from_batch(batch, cfg)
+        logits, _, state = forward(
+            params, tokens, cfg, frontend_embeds=fe, make_state=True,
+            state_len=state_len,
+            remat="none", q_chunk=q_chunk, rec_chunk=rec_chunk, logits_slice=1)
+        next_token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, state, token):
+        """token: (B, 1) int32 -> (next_token (B,), new_state)."""
+        logits, new_state = decode_step(params, state, token, cfg)
+        next_token = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return next_token, new_state
+
+    return serve_step
+
+
+def make_serve_step_with_logits(cfg: ArchConfig) -> Callable:
+    def serve_step(params, state, token):
+        logits, new_state = decode_step(params, state, token, cfg)
+        return logits[:, : cfg.vocab_size], new_state
+
+    return serve_step
+
+
+__all__ = [
+    "loss_fn", "chunked_cross_entropy", "make_train_step", "make_prefill_step",
+    "make_serve_step", "make_serve_step_with_logits", "init_params",
+    "init_decode_state", "frontend_embeds_from_batch", "padded_vocab",
+]

@@ -1,0 +1,348 @@
+"""GQA attention: chunked (flash-style) prefill and single-token decode.
+
+Covers every assigned attention variant:
+  * full causal ("global") and sliding-window ("local") layers — gemma2's
+    alternating pattern, danube3's SWA, recurrentgemma's local layers;
+  * attention-logit softcapping (gemma2);
+  * per-head qk RMSNorm (qwen3);
+  * QKV bias (qwen1.5 / internvl2);
+  * non-causal encoder attention + cross attention (whisper).
+
+Prefill is blockwise over query chunks (``lax.map`` + ``jax.checkpoint``) so the
+(Sq, Sk) logit matrix never fully materializes — O(B·H·chunk·band) live memory.
+Local layers additionally band-slice the keys, so their cost is O(S·window) not O(S²).
+
+KV caches are ring buffers of capacity C (= min(window, seq) for local layers, seq for
+global) with an explicit per-slot logical-position array ``k_pos`` (-1 ⇒ empty); masks
+are computed from positions, which makes ring wraparound trivially correct.
+
+On TPU the prefill path can be served by the Pallas flash kernel
+(`repro.kernels.flash_attention`); the jnp path here is also the reference oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _he, apply_rope, softcap
+
+NEG_INF = -2.0e38  # fp32-safe mask value
+
+
+class KVCache(NamedTuple):
+    # Layout (B, Hkv, C, hd): kv-heads ahead of sequence so the decode einsum
+    # 'bhgd,bhsd->bhgs' consumes the cache with NO transpose copies (perf
+    # iteration A2, EXPERIMENTS.md §Perf) and the flash-decode kernel's BlockSpec
+    # tiles (1, 1, block_k, hd) stream contiguously.
+    k: jax.Array       # (B, Hkv, C, hd)
+    v: jax.Array       # (B, Hkv, C, hd)
+    k_pos: jax.Array   # (B, C) int32 logical position per slot, -1 = empty
+                       # (per-batch: continuous batching gives each slot its own
+                       # position stream)
+
+
+# ---------------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (d, h * hd), d, dtype),
+        "wk": _he(ks[1], (d, hk * hd), d, dtype),
+        "wv": _he(ks[2], (d, hk * hd), d, dtype),
+        "wo": _he(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hk * hd,), dtype)
+        p["bv"] = jnp.zeros((hk * hd,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qk_rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (xf * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _project_qkv(params: dict, xq: jax.Array, xkv: jax.Array, cfg: ArchConfig):
+    """Returns q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd)."""
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = xq @ params["wq"]
+    k = xkv @ params["wk"]
+    v = xkv @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(*xq.shape[:-1], h, hd)
+    k = k.reshape(*xkv.shape[:-1], hk, hd)
+    v = v.reshape(*xkv.shape[:-1], hk, hd)
+    if "q_norm" in params:
+        q = _qk_rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = _qk_rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------------
+# Blockwise (flash-style) attention core — also the kernels' reference semantics
+# ---------------------------------------------------------------------------------
+
+def _attend(qc, kc, vc, mask, scale, cap):
+    """qc: (B,C,Hkv,G,hd)  kc/vc: (B,S,Hkv,hd)  mask: (C,S) bool or None."""
+    logits = jnp.einsum("bqhgd,bshd->bqhgs", qc, kc, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqhgs,bshd->bqhgd", probs.astype(vc.dtype), vc)
+    return out
+
+
+def blockwise_attention(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Sk, Hkv, hd)
+    v: jax.Array,                 # (B, Sk, Hkv, hd)
+    *,
+    q_positions: jax.Array,       # (Sq,) int32
+    k_positions: jax.Array,       # (Sk,) int32 (-1 = invalid slot)
+    causal: bool,
+    window: Optional[int],        # None = unbounded
+    attn_softcap: Optional[float],
+    q_chunk: int = 512,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+
+    C = min(q_chunk, Sq)
+    pad = (-Sq) % C
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-(10**9))
+    n_chunks = qg.shape[1] // C
+    qg = qg.reshape(B, n_chunks, C, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_positions.reshape(n_chunks, C)
+
+    banded = window is not None and causal and Sk > window + C
+    band = min(Sk, (window or 0) + C)
+
+    @jax.checkpoint
+    def chunk_fn(args):
+        qc, qpc, i0 = args
+        if banded:
+            # keys needed for q positions [i0, i0+C) lie in [i0-window+1, i0+C);
+            # band = window + C, so the band ending at i0+C covers them all.
+            start = jnp.clip(i0 + C - band, 0, Sk - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpc = jax.lax.dynamic_slice_in_dim(k_positions, start, band, axis=0)
+        else:
+            kc, vc, kpc = k, v, k_positions
+        mask = kpc[None, :] >= 0
+        if causal:
+            mask &= kpc[None, :] <= qpc[:, None]
+        if window is not None:
+            mask &= (qpc[:, None] - kpc[None, :]) < window
+        return _attend(qc, kc, vc, mask, scale, attn_softcap)
+
+    i0s = jnp.arange(n_chunks, dtype=jnp.int32) * C
+    out = jax.lax.map(chunk_fn, (qg, qp, i0s))          # (n_chunks, B, C, Hkv, G, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_chunks * C, H, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,                 # (B, 1, H, hd)
+    cache: KVCache,
+    pos,                          # int32 scalar or (B,): position of the new token
+    *,
+    window: Optional[int],
+    attn_softcap: Optional[float],
+) -> jax.Array:
+    B, _, H, hd = q.shape
+    Hkv = cache.k.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    # masks from logical slot positions — ring wraparound safe; per-batch positions
+    kp = cache.k_pos                                        # (B, C)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), kp.shape[:1] + (1,))
+    valid = (kp >= 0) & (kp <= pos_b)
+    if window is not None:
+        valid &= (pos_b - kp) < window
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, cache.k, preferred_element_type=jnp.float32)
+    logits = softcap(logits * scale, attn_softcap)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    # explicit max/exp/sum so a seq-sharded cache reduces with small all-reduces
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - jax.lax.stop_gradient(m))
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = (e / denom).astype(cache.v.dtype)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, cache.v)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------------
+# Cache construction / update
+# ---------------------------------------------------------------------------------
+
+def cache_capacity(cfg: ArchConfig, layer_type: str, seq_len: int) -> int:
+    from repro.models.config import LOCAL_ATTN
+    if layer_type == LOCAL_ATTN:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def build_cache_from_prefill(k: jax.Array, v: jax.Array, capacity: int) -> KVCache:
+    """Ring-aligned cache from prefill keys: position p lives at slot p % C.
+    k/v arrive as (B, S, Hkv, hd); the cache stores (B, Hkv, C, hd)."""
+    B, S, Hkv, hd = k.shape
+    C = capacity
+    kt = k.transpose(0, 2, 1, 3)                 # (B, Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    if C >= S:
+        pad = ((0, 0), (0, 0), (0, C - S), (0, 0))
+        kc, vc = jnp.pad(kt, pad), jnp.pad(vt, pad)
+        k_pos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                 jnp.full((C - S,), -1, jnp.int32)])
+        return KVCache(kc, vc, jnp.broadcast_to(k_pos, (B, C)))
+    shift = S % C
+    kc = jnp.roll(kt[:, :, S - C:], shift, axis=2)
+    vc = jnp.roll(vt[:, :, S - C:], shift, axis=2)
+    k_pos = jnp.roll(jnp.arange(S - C, S, dtype=jnp.int32), shift)
+    return KVCache(kc, vc, jnp.broadcast_to(k_pos, (B, C)))
+
+
+def empty_cache(cfg: ArchConfig, layer_type: str, batch: int, seq_len: int, dtype) -> KVCache:
+    C = cache_capacity(cfg, layer_type, seq_len)
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        jnp.zeros((batch, hk, C, hd), dtype),
+        jnp.zeros((batch, hk, C, hd), dtype),
+        jnp.full((batch, C), -1, jnp.int32),
+    )
+
+
+def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array, pos) -> KVCache:
+    """Write one token per batch row at its ring slot pos_b % C (per-slot positions:
+    continuous batching). k_new/v_new: (B, 1, Hkv, hd); pos: scalar or (B,).
+
+    Implemented as a masked select, not a scatter (perf iteration A3, EXPERIMENTS.md
+    §Perf): per-batch-row scatters made XLA round-trip the cache through f32
+    transpose copies; the select is one fused bf16 read+write in the cache's native
+    layout."""
+    import os
+    B, Hkv, C, hd = cache.k.shape
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    slot = pos_b % C
+    if os.environ.get("REPRO_PERF_BASELINE", "") == "1":   # pre-A3 scatter path
+        bidx = jnp.arange(B)
+        k = cache.k.at[bidx, :, slot].set(k_new[:, 0].astype(cache.k.dtype))
+        v = cache.v.at[bidx, :, slot].set(v_new[:, 0].astype(cache.v.dtype))
+        k_pos = cache.k_pos.at[bidx, slot].set(pos_b)
+        return KVCache(k, v, k_pos)
+    hit = jnp.arange(C, dtype=jnp.int32)[None, :] == slot[:, None]       # (B, C)
+    kn = k_new[:, 0].astype(cache.k.dtype)[:, :, None, :]               # (B,Hkv,1,hd)
+    vn = v_new[:, 0].astype(cache.v.dtype)[:, :, None, :]
+    k = jnp.where(hit[:, None, :, None], kn, cache.k)
+    v = jnp.where(hit[:, None, :, None], vn, cache.v)
+    k_pos = jnp.where(hit, pos_b[:, None], cache.k_pos)
+    return KVCache(k, v, k_pos)
+
+
+# ---------------------------------------------------------------------------------
+# Full attention sublayer (projections + rope + core + out-projection)
+# ---------------------------------------------------------------------------------
+
+def attention_prefill(
+    params: dict,
+    x: jax.Array,                  # (B, S, D)
+    cfg: ArchConfig,
+    layer_type: str,
+    positions: jax.Array,          # (S,)
+    *,
+    causal: bool = True,
+    make_cache: bool = False,
+    state_len: Optional[int] = None,   # total cache capacity (prompt + generation)
+    q_chunk: int = 512,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    from repro.models.config import LOCAL_ATTN
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if layer_type == LOCAL_ATTN else None
+    out = blockwise_attention(
+        q, k, v,
+        q_positions=positions, k_positions=positions,
+        causal=causal, window=window, attn_softcap=cfg.attn_logit_softcap,
+        q_chunk=q_chunk,
+    )
+    out = out.reshape(*x.shape[:-1], -1) @ params["wo"]
+    cache = None
+    if make_cache:
+        cap = cache_capacity(cfg, layer_type, max(state_len or 0, x.shape[1]))
+        cache = build_cache_from_prefill(k, v, cap)
+    return out, cache
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                  # (B, 1, D)
+    cache: KVCache,
+    pos,                           # scalar int32
+    cfg: ArchConfig,
+    layer_type: str,
+) -> Tuple[jax.Array, KVCache]:
+    from repro.models.config import LOCAL_ATTN
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    pos_arr = pos_arr.reshape(-1, 1) if pos_arr.ndim else pos_arr[None]  # (B,1)|(1,)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    cache = update_cache(cache, k, v, pos)
+    window = cfg.window if layer_type == LOCAL_ATTN else None
+    out = decode_attention(q, cache, pos, window=window, attn_softcap=cfg.attn_logit_softcap)
+    out = out.reshape(*x.shape[:-1], -1) @ params["wo"]
+    return out, cache
+
+
+def cross_attention(
+    params: dict,
+    x: jax.Array,                  # (B, Sq, D)
+    enc_k: jax.Array,              # (B, Senc, Hkv, hd)
+    enc_v: jax.Array,
+    cfg: ArchConfig,
+) -> jax.Array:
+    """Whisper decoder cross-attention over precomputed encoder K/V (non-causal)."""
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(*x.shape[:-1], h, hd)
+    if "bq" in params:
+        q = q + params["bq"].reshape(h, hd)
+    Senc = enc_k.shape[1]
+    pos_q = jnp.zeros((x.shape[1],), jnp.int32)
+    pos_k = jnp.arange(Senc, dtype=jnp.int32)
+    out = blockwise_attention(
+        q, enc_k, enc_v,
+        q_positions=pos_q, k_positions=pos_k,
+        causal=False, window=None, attn_softcap=None,
+    )
+    return out.reshape(*x.shape[:-1], -1) @ params["wo"]
+
+
+def project_cross_kv(params: dict, enc_out: jax.Array, cfg: ArchConfig):
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = (enc_out @ params["wk"]).reshape(*enc_out.shape[:-1], hk, hd)
+    v = (enc_out @ params["wv"]).reshape(*enc_out.shape[:-1], hk, hd)
+    return k, v

@@ -1,0 +1,136 @@
+"""Core neural layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-JAX, functional: every layer is ``apply(params, x, ...)`` with params created by
+a matching ``init_*``. Activations run in ``dtype`` (default bf16), numerically
+sensitive reductions (norms, softmax) in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def _he(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(scale_dim)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale) parameterization
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:  # sinusoidal-position archs (whisper) skip RoPE
+        return x
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int) -> jax.Array:
+    """Whisper-style sinusoidal embedding table, computed on the fly (no params)."""
+    half = d_model // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * math.log(10_000.0) / max(half - 1, 1))
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+def sinusoidal_position_at(pos, d_model: int) -> jax.Array:
+    """Sinusoidal embedding row(s) for (traced) scalar or (B,) positions."""
+    half = d_model // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * math.log(10_000.0) / max(half - 1, 1))
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * scale   # (..., half)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------------
+# MLP (dense; MoE lives in moe.py)
+# ---------------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": _he(k1, (d, f), d, dtype),
+            "w_in": _he(k2, (d, f), d, dtype),
+            "w_out": _he(k3, (f, d), f, dtype),
+        }
+    return {"w_in": _he(k1, (d, f), d, dtype), "w_out": _he(k2, (f, d), f, dtype)}
+
+
+def mlp(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(x @ params["w_gate"]) * (x @ params["w_in"])
+        return h @ params["w_out"]
+    return jax.nn.gelu(x @ params["w_in"], approximate=True) @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------------
+
+def padded_vocab(cfg: ArchConfig, multiple: int = 512) -> int:
+    """Vocab rounded up so the embedding table shards evenly on the model axis."""
+    return ((cfg.vocab_size + multiple - 1) // multiple) * multiple
+
+
+def init_embedding(key, cfg: ArchConfig, dtype) -> dict:
+    v = padded_vocab(cfg)
+    p = {"tok": _he(key, (v, cfg.d_model), cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = _he(jax.random.fold_in(key, 1), (cfg.d_model, v), cfg.d_model, dtype)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    table = params["head"] if "head" in params else params["tok"].T
+    logits = (x @ table).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,135 @@
+"""Top-k routed mixture-of-experts with per-row sort-based dispatch.
+
+Dispatch is O(S·k) memory per row (no (S, E, C) one-hot): assignments are sorted by
+expert id, ranked within each expert, capacity-dropped, and gathered into
+(B, E, C, D) buffers for the batched per-expert GEMMs. Everything is expressed with
+a leading batch dimension (batched sorts/scatters, no vmap), so under the production
+mesh the batch stays data-parallel-sharded and routing never all-gathers tokens.
+
+Expert parallelism (perf iteration B, EXPERIMENTS.md §Perf): the expert dimension
+shards over `model` whenever it divides the mesh axis — natively (moonshot, 64e) or
+via ``expert_pad_to`` (granite: 40 -> 48 padded experts; the 8 pad experts receive no
+tokens from the router, costing ~17 % idle expert-GEMM slots but replacing the
+(B,E,C,D) partial-sum all-reduce of TP-in-expert, which reduces over *capacity slots*
+(~top_k x tokens), with the small (B,S,D) combine all-reduce). Explicit sharding
+constraints pin the dispatch buffers to the expert axis.
+
+``no_drop=True`` (decode) sizes capacity so no token is ever dropped, keeping decode
+deterministic w.r.t. the prefill that built the cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _he
+
+_U = P.UNCONSTRAINED
+
+
+def _maybe_constrain(x: jax.Array, spec: P, expert_dim: int) -> jax.Array:
+    """Pin the expert axis to 'model' when a mesh is active and divides it
+    (no-op in plain single-device tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or getattr(mesh, "empty", True) or \
+                "model" not in getattr(mesh, "axis_names", ()):
+            return x
+        if expert_dim % dict(mesh.shape)["model"] != 0:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.n_experts_padded          # pad experts so EP shards evenly (iteration B)
+    ks = jax.random.split(key, 4)
+    p = {"router": _he(ks[0], (d, cfg.n_experts), d, jnp.float32)}  # REAL experts only
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = _he(ks[1], (e, d, f), d, dtype)
+        p["w_in"] = _he(ks[2], (e, d, f), d, dtype)
+    else:
+        p["w_in"] = _he(ks[2], (e, d, f), d, dtype)
+    p["w_out"] = _he(ks[3], (e, f, d), f, dtype)
+    return p
+
+
+def expert_capacity(cfg: ArchConfig, n_tokens: int, *, no_drop: bool = False) -> int:
+    if no_drop:
+        return n_tokens  # worst case: every token routes to the same expert
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(min(cap, n_tokens), min(cfg.top_k, n_tokens))
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ArchConfig, *,
+            no_drop: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    import os as _os
+    B, S, D = x.shape
+    E_real, K = cfg.n_experts, cfg.top_k
+    E = cfg.n_experts_padded
+    C = expert_capacity(cfg, S, no_drop=no_drop)
+    xe_spec = P(_U, "model", _U, _U)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                         # (B, S, E_real)
+    top_w, top_i = jax.lax.top_k(gates, K)                          # (B, S, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style): E * mean_b sum_e(f_e * p_e)
+    me = jnp.mean(gates, axis=1)                                    # (B, E_real)
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    ce = jnp.zeros((B, E_real), jnp.float32).at[
+        bidx, top_i.reshape(B, -1)].add(1.0) / (S * K)
+    aux = E_real * jnp.mean(jnp.sum(me * ce, axis=-1)) * cfg.router_aux_coef
+
+    # ---- batched sort-based dispatch ----------------------------------------------
+    e_flat = top_i.reshape(B, S * K)                                # (B, S*K)
+    t_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (B, S * K))
+    w_flat = top_w.reshape(B, S * K).astype(x.dtype)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    t_sorted = jnp.take_along_axis(t_flat, order, axis=-1)
+    w_sorted = jnp.take_along_axis(w_flat, order, axis=-1)
+    counts = jnp.zeros((B, E_real), jnp.int32).at[bidx, e_flat].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts                   # (B, E_real)
+    ranks = jnp.arange(S * K, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(starts, e_sorted, axis=-1)
+    keep = ranks < C                                                # capacity drop
+    slot = jnp.where(keep, e_sorted * C + ranks, E * C)             # OOB sentinel
+
+    slot_tok = jnp.full((B, E * C), S, jnp.int32).at[bidx, slot].set(
+        t_sorted, mode="drop")
+    slot_w = jnp.zeros((B, E * C), x.dtype).at[bidx, slot].set(w_sorted, mode="drop")
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(x_pad, slot_tok[..., None], axis=1)    # (B, E*C, D)
+    xe = xe.reshape(B, E, C, D)
+    if _os.environ.get("REPRO_PERF_BASELINE", "") != "1":
+        xe = _maybe_constrain(xe, xe_spec, E)  # EP: the dispatch all-to-all lives here
+
+    # ---- batched per-expert FFN (local under EP) -----------------------------------
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda u: jax.nn.gelu(u, approximate=True))
+        h = act(jnp.einsum("becd,edf->becf", xe, params["w_gate"])) * \
+            jnp.einsum("becd,edf->becf", xe, params["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, params["w_in"]),
+                        approximate=True)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_out"])           # (B, E, C, D)
+    if _os.environ.get("REPRO_PERF_BASELINE", "") != "1":
+        ye = _maybe_constrain(ye, xe_spec, E)
+
+    # ---- weighted combine back to token order (small (B,S,D) reduction) ------------
+    out = jnp.zeros((B, S + 1, D), x.dtype)
+    out = out.at[bidx, slot_tok].add(
+        ye.reshape(B, E * C, D) * slot_w[..., None])
+    return out[:, :S], aux

@@ -1,0 +1,83 @@
+"""Chunked diagonal linear recurrence: h_t = a_t * h_{t-1} + b_t (elementwise).
+
+Shared by the Mamba-1 selective scan (channels = d_inner x ssm_state) and the RG-LRU
+(channels = lru_width). Sequence is processed in chunks: an outer ``lax.scan`` carries
+the state between chunks (keeping live memory O(B·chunk·channels)), and an inner
+``associative_scan`` parallelizes within the chunk (TPU-friendly log-depth).
+
+`repro.kernels.diag_recurrence` is the Pallas realization of the same contract; this
+module is its reference semantics.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_diag_recurrence(
+    a: jax.Array,          # (B, S, *C) decay per step
+    b: jax.Array,          # (B, S, *C) input per step
+    h0: jax.Array,         # (B, *C) initial state
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h_all (B, S, *C), h_final (B, *C))."""
+    B, S = a.shape[0], a.shape[1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:  # identity elements: a=1, b=0
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
+    n_chunks = a.shape[1] // C
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, n_chunks, C, *x.shape[2:]), 1, 0)
+
+    a_c, b_c = to_chunks(a), to_chunks(b)        # (nc, B, C, *ch)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h, ab):
+        ac, bc = ab                               # (B, C, *ch)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = aa * h[:, None] + bb              # fold in the inter-chunk carry
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(B, n_chunks * C, *a.shape[2:])
+    return h_all[:, :S], h_final
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (C, width)."""
+    width = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    kernel = w.T[:, None, :]                      # (width, 1, C)
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), kernel.astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    ).astype(x.dtype)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def causal_conv1d_step(
+    x_new: jax.Array,       # (B, 1, C)
+    conv_state: jax.Array,  # (B, width-1, C) trailing inputs
+    w: jax.Array,           # (C, width)
+    b: jax.Array | None = None,
+):
+    """Single-token conv step; returns (out (B,1,C), new_state)."""
+    window = jnp.concatenate([conv_state, x_new], axis=1)      # (B, width, C)
+    out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x_new.dtype)[:, None]
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:]

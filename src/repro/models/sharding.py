@@ -1,0 +1,233 @@
+"""PartitionSpec rules for every parameter / batch / decode-state tensor.
+
+Policy (DESIGN.md §5):
+  * `model` axis = tensor parallelism: attention heads, FFN hidden, expert axis
+    (true EP when n_experts % tp == 0, else TP inside the expert), vocab.
+  * `data` (+ `pod`) axes = data parallelism over the batch; when the batch cannot
+    cover them (long_500k, batch=1) the KV-cache *sequence* dimension is sharded over
+    `data` instead (sequence parallelism for decode).
+  * Archs whose head counts don't divide the model axis (whisper 12H, internvl2 14H,
+    granite 24H, recurrentgemma 10H/MQA) replicate attention projections and shard
+    FFN + vocab — recorded per-arch by :func:`arch_sharding_caps`.
+
+All rules are path-based over the pytrees produced by ``init_params`` /
+``init_decode_state``, so they apply equally to real arrays and ShapeDtypeStructs
+(the dry-run path).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (dp_axes, model_axis)."""
+    names = mesh.axis_names
+    assert names[-1] == "model", f"mesh must end with 'model', got {names}"
+    return tuple(names[:-1]), "model"
+
+
+def arch_sharding_caps(cfg: ArchConfig, tp: int) -> Dict[str, bool]:
+    return {
+        "shard_q": cfg.n_heads % tp == 0,
+        "shard_kv": cfg.n_kv_heads % tp == 0,
+        "shard_ff": (cfg.d_ff % tp == 0) and cfg.d_ff > 0,
+        "shard_experts": cfg.n_experts > 0 and cfg.n_experts_padded % tp == 0,
+        "shard_expert_ff": cfg.n_experts > 0 and cfg.d_ff % tp == 0,
+        "shard_inner": (cfg.d_inner % tp == 0),
+        "shard_lru": (cfg.resolved_lru_width % tp == 0),
+    }
+
+
+def _param_rule(name: str, caps: Dict[str, bool], cfg: ArchConfig) -> P:
+    m = "model"
+    # embeddings
+    if name == "tok":
+        return P(m, None)
+    if name == "head":
+        return P(None, m)
+    # attention
+    if name == "wq":
+        return P(None, m) if caps["shard_q"] else P(None, None)
+    if name in ("wk", "wv"):
+        return P(None, m) if caps["shard_kv"] else P(None, None)
+    if name == "wo":
+        return P(m, None) if caps["shard_q"] else P(None, None)
+    if name == "bq":
+        return P(m) if caps["shard_q"] else P(None)
+    if name in ("bk", "bv"):
+        return P(m) if caps["shard_kv"] else P(None)
+    if name in ("q_norm", "k_norm"):
+        return P(None)
+    # dense MLP
+    if name in ("w_gate", "w_in"):
+        if cfg.n_experts > 0:  # expert tensors (E, D, F)
+            if caps["shard_experts"]:
+                return P(m, None, None)
+            return P(None, None, m) if caps["shard_expert_ff"] else P(None, None, None)
+        return P(None, m) if caps["shard_ff"] else P(None, None)
+    if name == "w_out":
+        if cfg.n_experts > 0:  # (E, F, D)
+            if caps["shard_experts"]:
+                return P(m, None, None)
+            return P(None, m, None) if caps["shard_expert_ff"] else P(None, None, None)
+        return P(m, None) if caps["shard_ff"] else P(None, None)
+    if name == "router":
+        return P(None, None)
+    # mamba
+    if name == "in_proj":
+        return P(None, m) if caps["shard_inner"] else P(None, None)
+    if name in ("conv_w",):
+        return P(m, None) if caps["shard_inner"] else P(None, None)
+    if name in ("conv_b", "dt_bias", "D"):
+        return P(m) if caps["shard_inner"] else P(None)
+    if name == "x_proj":
+        return P(m, None) if caps["shard_inner"] else P(None, None)
+    if name == "dt_proj":
+        return P(None, m) if caps["shard_inner"] else P(None, None)
+    if name == "A_log":
+        return P(m, None) if caps["shard_inner"] else P(None, None)
+    if name == "out_proj":
+        sharded = caps["shard_inner"] if cfg.d_ff == 0 else caps["shard_lru"]
+        return P(m, None) if sharded else P(None, None)
+    # rg-lru
+    if name in ("linear_x", "linear_y", "w_a", "w_x"):
+        return P(None, m) if caps["shard_lru"] else P(None, None)
+    if name in ("b_a", "b_x", "lambda"):
+        return P(m) if caps["shard_lru"] else P(None)
+    # norms / scalars
+    if name in ("scale",):
+        return P(None)
+    return P()  # default: replicate
+
+
+def _leaf_name(path) -> Tuple[str, bool]:
+    """(final dict key, is_stacked) — stacked = inside 'unit'/'enc' (leading units dim)."""
+    keys = []
+    stacked = False
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            keys.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            keys.append(p.name)
+    if keys and keys[0] in ("unit", "enc"):
+        stacked = True
+    name = keys[-1] if keys else ""
+    return name, stacked
+
+
+def param_pspecs(cfg: ArchConfig, params: Any, tp: int):
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs)."""
+    caps = arch_sharding_caps(cfg, tp)
+
+    def rule(path, leaf):
+        name, stacked = _leaf_name(path)
+        # conv weights are shared-name between ssm and rglru; pick caps accordingly
+        if name in ("conv_w", "conv_b") and cfg.resolved_lru_width and cfg.d_ff > 0 \
+                and "rec" in jax.tree_util.keystr(path):
+            spec = (P("model", None) if caps["shard_lru"] else P(None, None)) \
+                if name == "conv_w" else (P("model") if caps["shard_lru"] else P(None))
+        else:
+            spec = _param_rule(name, caps, cfg)
+        if len(spec) > leaf.ndim:
+            spec = P(*spec[: leaf.ndim])
+        if stacked:
+            spec = P(None, *spec)
+            if len(spec) > leaf.ndim:
+                spec = P(*spec[: leaf.ndim])
+        if len(spec) < leaf.ndim:
+            spec = P(*spec, *([None] * (leaf.ndim - len(spec))))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_state_pspecs(cfg: ArchConfig, opt_state: Any, params_specs: Any):
+    return {
+        "mu": params_specs,
+        "nu": params_specs,
+        "count": P(),
+    }
+
+
+def batch_pspecs(cfg: ArchConfig, batch: Dict[str, Any], dp_axes: Tuple[str, ...],
+                 dp_size: int):
+    """Shard the batch over DP axes (replicate if batch doesn't cover them)."""
+    specs = {}
+    for k, v in batch.items():
+        bdim = dp_axes if v.shape[0] % dp_size == 0 and v.shape[0] >= dp_size else None
+        specs[k] = P(bdim, *([None] * (v.ndim - 1)))
+    return specs
+
+
+def decode_state_pspecs(cfg: ArchConfig, state: Any, dp_axes: Tuple[str, ...],
+                        dp_size: int, tp: int, batch: int):
+    """KV caches: batch over DP when possible, else sequence over 'data' (SP);
+    kv-heads over model when divisible. Recurrent states: width over model."""
+    caps = arch_sharding_caps(cfg, tp)
+    batch_covers = batch % dp_size == 0 and batch >= dp_size
+    kv_axis = "model" if caps["shard_kv"] else None
+    # Cache sequence-dim sharding (perf iteration A, EXPERIMENTS.md §Perf):
+    #  * batch doesn't cover DP (long_500k): seq takes the DP 'data' axis (SP);
+    #  * kv heads don't divide the model axis: seq takes 'model' — otherwise the
+    #    cache would be REPLICATED tp-ways and every decode step all-gathers it.
+    #    Decode attention reduces over seq, so a seq-sharded cache costs only small
+    #    logsumexp all-reduces (the explicit max/exp/sum form in attention.py).
+    import os
+    baseline = os.environ.get("REPRO_PERF_BASELINE", "") == "1"
+    seq_parts = []
+    if not batch_covers:
+        seq_parts.append("data" if "data" in dp_axes else dp_axes[-1])
+    if not caps["shard_kv"] and not baseline:
+        seq_parts.append("model")
+    seq_axis = tuple(seq_parts) if seq_parts else None
+
+    def rule(path, leaf):
+        kp = jax.tree_util.keystr(path)
+        name, _ = _leaf_name(path)
+        lead = (None,) if (kp.startswith("['unit']") or "cross" in kp) else ()
+        if name == "pos" or leaf.ndim == 0:
+            bspec = dp_axes if (leaf.ndim == 1 and batch_covers) else None
+            return P(*([bspec] * leaf.ndim))
+        if leaf.dtype == jax.numpy.int32:                      # k_pos (B,C) [+lead]
+            bspec = dp_axes if batch_covers else None
+            dims = lead + (bspec, seq_axis)
+            return P(*dims[-leaf.ndim:]) if leaf.ndim <= len(dims) else \
+                P(*dims, *([None] * (leaf.ndim - len(dims))))
+        # whisper cross-attention KV keeps (B, Senc, Hkv, hd) layout; Senc=1500 and
+        # Hkv=12 don't divide the model axis -> batch sharding only (it's small)
+        if "cross" in kp:
+            bspec = dp_axes if batch_covers else None
+            dims = lead + (bspec,) + (None,) * (leaf.ndim - len(lead) - 1)
+            return P(*dims[: leaf.ndim])
+        # KVCache k/v: (B, Hkv, C, hd) [+unit lead]
+        if leaf.ndim - len(lead) == 4:
+            bspec = dp_axes if batch_covers else None
+            return P(*lead, bspec, kv_axis, seq_axis, None)
+        bspec = dp_axes if batch_covers else None
+        # ssm h: (B, di, N) [+lead] — keyed by field name, not dtype
+        if name == "h" and leaf.ndim - len(lead) == 3:
+            inner = "model" if caps["shard_inner"] else None
+            return P(*lead, bspec, inner, None)
+        # conv tail states (B, w-1, C) [+lead]
+        if name == "conv" and leaf.ndim - len(lead) == 3:
+            ch = "model" if (caps["shard_inner"] or caps["shard_lru"]) else None
+            return P(*lead, bspec, None, ch)
+        # rglru h (B, W) [+lead]
+        if leaf.ndim - len(lead) == 2:
+            ch = "model" if caps["shard_lru"] else None
+            return P(*lead, bspec, ch)
+        if leaf.ndim - len(lead) == 3:
+            return P(*lead, bspec, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, state)
+
+
+def to_shardings(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        pspecs, is_leaf=lambda x: isinstance(x, P))

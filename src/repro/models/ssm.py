@@ -1,0 +1,168 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+The block subsumes both temporal mixing and the MLP (no separate FFN in Mamba archs).
+Prefill/training uses the chunked diagonal recurrence (O(B·chunk·d_inner·N) live
+memory); decode is a single fused state update. The recurrent state per layer is
+``h (B, d_inner, N)`` + a small causal-conv tail — the "no unbounded KV cache"
+property that qualifies this arch for long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _he
+from repro.models.recurrence import (
+    causal_conv1d,
+    causal_conv1d_step,
+    chunked_diag_recurrence,
+)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array           # (B, d_inner, N) fp32
+    conv: jax.Array        # (B, d_conv-1, d_inner)
+
+
+def init_ssm(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[0], (di,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": _he(ks[1], (d, 2 * di), d, dtype),
+        "conv_w": _he(ks[2], (di, cfg.d_conv), cfg.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _he(ks[3], (di, r + 2 * n), di, dtype),
+        "dt_proj": _he(ks[4], (r, di), r, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _he(ks[5], (di, d), di, dtype),
+    }
+
+
+def _ssm_inputs(params: dict, x: jax.Array, cfg: ArchConfig):
+    """Shared projections. x: (B, S, D) -> (x_conv_in, z, helpers)."""
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)          # (B, S, di) each
+    return x_in, z
+
+
+def _selective_terms(params: dict, x_conv: jax.Array, cfg: ArchConfig):
+    """x_conv: (B, S, di) post conv+silu -> a, b, C for the diagonal recurrence."""
+    n, r = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = x_conv @ params["x_proj"]             # (B, S, r+2n)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(params["A_log"])                # (di, n)
+    a = jnp.exp(dt[..., None] * A)               # (B, S, di, n)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[:, :, None, :]  # (B, S, di, n)
+    return a, b, c_ssm
+
+
+def ssm_prefill(
+    params: dict,
+    x: jax.Array,                # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    make_state: bool = False,
+    chunk: int = 256,
+) -> Tuple[jax.Array, SSMState | None]:
+    """Chunk-fused selective scan (perf iteration C, EXPERIMENTS.md §Perf).
+
+    The (B, S, d_inner, N) recurrence inputs a/b are never materialized at full
+    sequence length: each outer-scan step slices one (B, chunk, d_inner) piece of
+    x_conv, expands a/b for that chunk only, runs the within-chunk associative scan,
+    contracts against C_t immediately, and emits y (B, chunk, d_inner). The
+    full-length (B,S,di,N) tensors (4·di·N bytes/token) are thereby replaced by
+    (B,S,di)-sized streams — an N-fold (16x) HBM-traffic reduction at equal FLOPs.
+    On TPU the same contraction runs inside the diag_recurrence Pallas kernel
+    (kernels/diag_recurrence), collapsing even the per-chunk expansion into VMEM."""
+    import os
+    B, S, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    x_in, z = _ssm_inputs(params, x, cfg)
+    x_conv = jax.nn.silu(causal_conv1d(x_in, params["conv_w"], params["conv_b"]))
+
+    if os.environ.get("REPRO_PERF_BASELINE", "") == "1":
+        # pre-iteration-C path: a/b materialized at full sequence length
+        a, b, c_ssm = _selective_terms(params, x_conv, cfg)
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        h_all, h_final = chunked_diag_recurrence(a, b, h0, chunk=chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm.astype(jnp.float32))
+        y = (y + params["D"] * x_conv.astype(jnp.float32)).astype(x.dtype)
+        out = (y * jax.nn.silu(z)) @ params["out_proj"]
+        state = None
+        if make_state:
+            tail = x_in[:, -(cfg.d_conv - 1):]
+            pad2 = cfg.d_conv - 1 - tail.shape[1]
+            if pad2 > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad2, 0), (0, 0)))
+            state = SSMState(h=h_final, conv=tail)
+        return out, state
+
+    C = min(chunk, S)
+    pad = (-S) % C
+    xc = jnp.pad(x_conv, ((0, 0), (0, pad), (0, 0))) if pad else x_conv
+    n_chunks = xc.shape[1] // C
+    xc_chunks = jnp.moveaxis(xc.reshape(B, n_chunks, C, di), 1, 0)  # (nc,B,C,di)
+
+    def body(h, xck):
+        a, b, c_ssm = _selective_terms(params, xck, cfg)            # chunk-local
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a2 * a1, a2 * b1 + b2
+        aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = aa * h[:, None] + bb                                # (B,C,di,n)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    h_final, y_chunks = jax.lax.scan(body, h0, xc_chunks)
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, n_chunks * C, di)[:, :S]
+    y = (y + params["D"] * x_conv.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    state = None
+    if make_state:
+        tail = x_in[:, -(cfg.d_conv - 1):]
+        pad2 = cfg.d_conv - 1 - tail.shape[1]
+        if pad2 > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad2, 0), (0, 0)))
+        state = SSMState(h=h_final, conv=tail)
+    return out, state
+
+
+def ssm_decode(
+    params: dict,
+    x: jax.Array,                # (B, 1, D)
+    state: SSMState,
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, SSMState]:
+    x_in, z = _ssm_inputs(params, x, cfg)
+    conv_out, conv_state = causal_conv1d_step(x_in, state.conv, params["conv_w"], params["conv_b"])
+    x_conv = jax.nn.silu(conv_out)               # (B, 1, di)
+    a, b, c_ssm = _selective_terms(params, x_conv, cfg)
+    h = a[:, 0] * state.h + b[:, 0]              # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))
+    y = (y + params["D"] * x_conv[:, 0].astype(jnp.float32)).astype(x.dtype)[:, None]
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    return out, SSMState(h=h, conv=conv_state)
+
+
+def empty_ssm_state(cfg: ArchConfig, batch: int, dtype) -> SSMState:
+    return SSMState(
+        h=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    )

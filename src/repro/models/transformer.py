@@ -1,0 +1,387 @@
+"""Unified model definition covering all 10 assigned architectures.
+
+One code path, driven entirely by :class:`ArchConfig`:
+
+  * decoder-only LMs (dense / MoE) with any repeating attention pattern
+    (full, sliding-window, local+global alternating);
+  * attention-free SSM stacks (Mamba-1);
+  * hybrid recurrent/attention stacks (RG-LRU, Griffin pattern with remainder layers);
+  * encoder-decoder (whisper) with cross-attention and a stubbed audio frontend;
+  * VLM (stubbed vision frontend: precomputed patch embeddings prepended).
+
+Layers are applied with **scan-over-pattern-units**: parameters for one repeating
+pattern unit are stacked along a leading ``n_units`` axis and the unit body is scanned,
+so the lowered HLO is depth-independent (critical for compiling 46–64-layer models for
+512 devices). Remainder layers (e.g. recurrentgemma's 26 = 8x3 + 2) are applied
+unstacked after the scan.
+
+Fidelity notes (see DESIGN.md): gemma2's post-block norms are folded into the pre-norm
+(shape/FLOP-neutral); whisper uses sinusoidal positions on both sides.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig, GLOBAL_ATTN, LOCAL_ATTN, RECURRENT, SSM
+from repro.models.layers import (
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    sinusoidal_position_at,
+    sinusoidal_positions,
+    unembed,
+)
+
+LayerParams = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, ltype: str, dtype, *, cross: bool = False) -> LayerParams:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if ltype == SSM:
+        return {"ln1": init_rmsnorm(d, dtype), "ssm": ssm_mod.init_ssm(ks[0], cfg, dtype)}
+    p: LayerParams = {"ln1": init_rmsnorm(d, dtype)}
+    if ltype == RECURRENT:
+        p["rec"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cross:
+        p["lnx"] = init_rmsnorm(d, dtype)
+        p["xattn"] = attn.init_attention(ks[1], cfg, dtype, cross=True)
+    p["ln2"] = init_rmsnorm(d, dtype)
+    if cfg.n_experts > 0:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg, dtype)
+    return p
+
+
+def _init_unit(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> Tuple[LayerParams, ...]:
+    ks = jax.random.split(key, len(cfg.attn_pattern))
+    return tuple(
+        _init_layer(ks[i], cfg, t, dtype, cross=cross)
+        for i, t in enumerate(cfg.attn_pattern)
+    )
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    n_units = cfg.n_pattern_units
+    unit_keys = jax.random.split(keys[1], n_units)
+    params["unit"] = jax.vmap(
+        lambda k: _init_unit(k, cfg, dtype, cross=cfg.is_encoder_decoder)
+    )(unit_keys)
+    rem_keys = jax.random.split(keys[2], max(cfg.n_remainder_layers, 1))
+    params["rem"] = tuple(
+        _init_layer(rem_keys[i], cfg, cfg.attn_pattern[i % len(cfg.attn_pattern)], dtype,
+                    cross=cfg.is_encoder_decoder)
+        for i in range(cfg.n_remainder_layers)
+    )
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg  # same width; encoder layers are non-causal global attention
+        enc_keys = jax.random.split(keys[3], cfg.n_enc_layers)
+        params["enc"] = jax.vmap(
+            lambda k: _init_layer(k, enc_cfg, GLOBAL_ATTN, dtype)
+        )(enc_keys)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------------
+# Layer application — full-sequence (train / prefill)
+# ---------------------------------------------------------------------------------
+
+def _apply_mlp_part(p: LayerParams, x: jax.Array, cfg: ArchConfig,
+                    *, decode: bool = False):
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts > 0:
+        out, aux = moe_mod.moe_ffn(p["moe"], h, cfg, no_drop=decode)
+    else:
+        out, aux = mlp(p["mlp"], h, cfg.mlp), jnp.float32(0.0)
+    return x + out, aux
+
+
+def _apply_layer_seq(
+    p: LayerParams,
+    x: jax.Array,
+    cfg: ArchConfig,
+    ltype: str,
+    positions: jax.Array,
+    *,
+    causal: bool,
+    make_state: bool,
+    state_len: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    q_chunk: int = 512,
+    rec_chunk: int = 256,
+):
+    """Returns (x, aux_loss, state_or_None)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    state = None
+    if ltype == SSM:
+        out, state = ssm_mod.ssm_prefill(p["ssm"], h, cfg, make_state=make_state,
+                                         chunk=rec_chunk)
+        return x + out, jnp.float32(0.0), state
+    if ltype == RECURRENT:
+        out, state = rglru_mod.rglru_prefill(p["rec"], h, cfg, make_state=make_state,
+                                             chunk=rec_chunk)
+        x = x + out
+    else:
+        out, cache = attn.attention_prefill(
+            p["attn"], h, cfg, ltype, positions,
+            causal=causal, make_cache=make_state, state_len=state_len, q_chunk=q_chunk)
+        x = x + out
+        state = cache
+    if cross_kv is not None:
+        hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], hx, cross_kv[0], cross_kv[1], cfg)
+    x, aux = _apply_mlp_part(p, x, cfg)
+    return x, aux, state
+
+
+# ---------------------------------------------------------------------------------
+# Layer application — single-token decode
+# ---------------------------------------------------------------------------------
+
+def _apply_layer_decode(
+    p: LayerParams,
+    x: jax.Array,             # (B, 1, D)
+    st,
+    pos,
+    cfg: ArchConfig,
+    ltype: str,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if ltype == SSM:
+        out, st = ssm_mod.ssm_decode(p["ssm"], h, st, cfg)
+        return x + out, st
+    if ltype == RECURRENT:
+        out, st = rglru_mod.rglru_decode(p["rec"], h, st, cfg)
+        x = x + out
+    else:
+        out, st = attn.attention_decode(p["attn"], h, st, pos, cfg, ltype)
+        x = x + out
+    if cross_kv is not None:
+        hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], hx, cross_kv[0], cross_kv[1], cfg)
+    x, _ = _apply_mlp_part(p, x, cfg, decode=True)
+    return x, st
+
+
+# ---------------------------------------------------------------------------------
+# Empty decode state (for dry-run input_specs and fresh decoding)
+# ---------------------------------------------------------------------------------
+
+def _empty_layer_state(cfg: ArchConfig, ltype: str, batch: int, seq_len: int, dtype):
+    if ltype == SSM:
+        return ssm_mod.empty_ssm_state(cfg, batch, dtype)
+    if ltype == RECURRENT:
+        return rglru_mod.empty_rglru_state(cfg, batch, dtype)
+    return attn.empty_cache(cfg, ltype, batch, seq_len, dtype)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    n_units = cfg.n_pattern_units
+    unit = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (n_units,) + a.shape).copy()
+                     if n_units > 0 else a,
+                     _empty_layer_state(cfg, t, batch, seq_len, dtype))
+        for t in cfg.attn_pattern
+    )
+    rem = tuple(
+        _empty_layer_state(cfg, cfg.attn_pattern[i % len(cfg.attn_pattern)], batch,
+                           seq_len, dtype)
+        for i in range(cfg.n_remainder_layers)
+    )
+    state: Dict[str, Any] = {"unit": unit, "rem": rem,
+                             "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        state["cross"] = {
+            "k": jnp.zeros((n_units, batch, cfg.n_enc_positions, hk, hd), dtype),
+            "v": jnp.zeros((n_units, batch, cfg.n_enc_positions, hk, hd), dtype),
+        }
+    return state
+
+
+# ---------------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------------
+
+def encode(params, frames: jax.Array, cfg: ArchConfig, *, remat: bool = False):
+    """frames: (B, S_enc, D) precomputed stub embeddings -> encoder output."""
+    S = frames.shape[1]
+    # stub embeddings arrive fp32; run the stack in the param compute dtype
+    frames = frames.astype(params["enc_norm"]["scale"].dtype)
+    x = frames + sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, unit_p):
+        y, _, _ = _apply_layer_seq(unit_p, carry, cfg, GLOBAL_ATTN, positions,
+                                   causal=False, make_state=False)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------------
+
+def forward(
+    params,
+    tokens: jax.Array,                      # (B, S_tok) int32
+    cfg: ArchConfig,
+    *,
+    frontend_embeds: Optional[jax.Array] = None,  # (B, S_front, D) for audio/vlm
+    make_state: bool = False,
+    state_len: Optional[int] = None,        # decode-state capacity (prompt + budget)
+    remat: str = "none",                    # none | unit | dots
+    q_chunk: int = 512,
+    rec_chunk: int = 256,
+    logits_slice: Optional[int] = None,     # keep only the last N positions' logits
+    return_features: bool = False,          # skip unembed (loss computes it chunked)
+):
+    """Returns (logits fp32 (B, S, Vp) — or features (B, S, D) if
+    ``return_features`` — , aux_loss, state_or_None)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    cross_kv_seq = None
+    if cfg.is_encoder_decoder:
+        assert frontend_embeds is not None, "whisper needs stub frame embeddings"
+        enc_out = encode(params, frontend_embeds, cfg, remat=(remat != "none"))
+        S = tokens.shape[1]
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+    elif frontend_embeds is not None:       # VLM: prepend patch embeddings
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total, dtype=jnp.int32)
+
+    def unit_body(carry, unit_p):
+        y, aux_acc = carry
+        states = []
+        for i, ltype in enumerate(cfg.attn_pattern):
+            ck = None
+            if cfg.is_encoder_decoder:
+                k = attn.project_cross_kv(unit_p[i]["xattn"], enc_out, cfg)
+                ck = k
+                states_cross = k
+            y, aux, st = _apply_layer_seq(
+                unit_p[i], y, cfg, ltype, positions,
+                causal=True, make_state=make_state, state_len=state_len, cross_kv=ck,
+                q_chunk=q_chunk, rec_chunk=rec_chunk)
+            states.append(st)
+        ys = tuple(states) if make_state else None
+        if cfg.is_encoder_decoder and make_state:
+            ys = (ys, states_cross)
+        return (y, aux_acc + aux), ys
+
+    body = unit_body
+    if remat == "unit":
+        body = jax.checkpoint(unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            unit_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux_loss), unit_states = jax.lax.scan(body, (x, jnp.float32(0.0)), params["unit"])
+
+    rem_states = []
+    for i in range(cfg.n_remainder_layers):
+        ltype = cfg.attn_pattern[i % len(cfg.attn_pattern)]
+        x, aux, st = _apply_layer_seq(params["rem"][i], x, cfg, ltype, positions,
+                                      causal=True, make_state=make_state,
+                                      state_len=state_len,
+                                      q_chunk=q_chunk, rec_chunk=rec_chunk)
+        aux_loss = aux_loss + aux
+        rem_states.append(st)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = x if return_features else unembed(params["embed"], x, cfg)
+
+    state = None
+    if make_state:
+        cross = None
+        if cfg.is_encoder_decoder:
+            unit_states, cross_kv = unit_states
+            cross = {"k": cross_kv[0], "v": cross_kv[1]}
+        state = {"unit": unit_states, "rem": tuple(rem_states),
+                 "pos": jnp.full((tokens.shape[0],), S_total, jnp.int32)}
+        if cross is not None:
+            state["cross"] = cross
+    return logits, aux_loss, state
+
+
+# ---------------------------------------------------------------------------------
+# Single-token decode step
+# ---------------------------------------------------------------------------------
+
+def decode_step(
+    params,
+    state,
+    token: jax.Array,       # (B, 1) int32
+    cfg: ArchConfig,
+):
+    """One autoregressive step. Returns (logits fp32 (B, Vp), new_state)."""
+    pos = state["pos"]                                   # (B,) per-slot positions
+    x = embed_tokens(params["embed"], token, cfg)
+    if cfg.is_encoder_decoder:
+        sin = sinusoidal_position_at(pos, cfg.d_model).astype(x.dtype)  # (B, D)|(D,)
+        x = x + (sin[:, None] if sin.ndim == 2 else sin[None, None])
+
+    def unit_body(x_carry, xs):
+        if cfg.is_encoder_decoder:
+            unit_p, unit_st, ck, cv = xs
+        else:
+            unit_p, unit_st = xs
+        y = x_carry
+        new_states = []
+        for i, ltype in enumerate(cfg.attn_pattern):
+            cross = (ck, cv) if cfg.is_encoder_decoder else None
+            y, st = _apply_layer_decode(unit_p[i], y, unit_st[i], pos, cfg, ltype,
+                                        cross_kv=cross)
+            new_states.append(st)
+        return y, tuple(new_states)
+
+    if cfg.is_encoder_decoder:
+        xs = (params["unit"], state["unit"], state["cross"]["k"], state["cross"]["v"])
+    else:
+        xs = (params["unit"], state["unit"])
+    x, new_unit_states = jax.lax.scan(unit_body, x, xs)
+
+    new_rem = []
+    for i in range(cfg.n_remainder_layers):
+        ltype = cfg.attn_pattern[i % len(cfg.attn_pattern)]
+        x, st = _apply_layer_decode(params["rem"][i], x, state["rem"][i], pos, cfg, ltype)
+        new_rem.append(st)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)[:, 0]          # (B, Vp)
+    new_state = dict(state)
+    new_state["unit"] = new_unit_states
+    new_state["rem"] = tuple(new_rem)
+    new_state["pos"] = pos + 1
+    return logits, new_state

@@ -1,0 +1,14 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_gradients,
+    decompress_gradients,
+    init_error_feedback,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm", "cosine_schedule",
+    "CompressionConfig", "compress_gradients", "decompress_gradients",
+    "init_error_feedback",
+]

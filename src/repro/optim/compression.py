@@ -1,0 +1,48 @@
+"""Int8 gradient compression with error feedback (distributed-optimization trick).
+
+Before the data-parallel all-reduce, gradients are quantized to int8 with a per-tensor
+fp32 scale; the quantization residual is carried in an error-feedback buffer and added
+back next step (guarantees the compressed SGD trajectory tracks the exact one).
+This cuts DP all-reduce bytes 2x (bf16) / 4x (fp32) — a direct lever on the
+collective roofline term, selectable via ``TrainLoopConfig.grad_compression``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8           # int8 quantization
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q(g, ef):
+    g = g.astype(jnp.float32) + ef
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    residual = g - q.astype(jnp.float32) * scale
+    return q, scale, residual
+
+
+def compress_gradients(grads, error_feedback) -> Tuple[dict, dict]:
+    """Returns ({'q': int8 tree, 'scale': fp32 tree}, new_error_feedback)."""
+    qs = jax.tree.map(_q, grads, error_feedback)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    scale = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[2], qs, is_leaf=lambda t: isinstance(t, tuple))
+    return {"q": q, "scale": scale}, resid
+
+
+def decompress_gradients(compressed) -> dict:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        compressed["q"], compressed["scale"])

@@ -1,0 +1,14 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)  # nonzero at step 0
+    progress = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup_steps, warm, cos)

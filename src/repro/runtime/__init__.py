@@ -1,0 +1,8 @@
+from repro.runtime.fault_tolerance import (
+    InjectedFailure,
+    ReplicaSet,
+    SupervisorConfig,
+    TrainSupervisor,
+)
+
+__all__ = ["InjectedFailure", "ReplicaSet", "SupervisorConfig", "TrainSupervisor"]

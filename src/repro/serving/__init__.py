@@ -1,0 +1,9 @@
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.scheduler import FleetScheduler, SchedulerConfig
+from repro.serving.state_utils import state_extract, state_reset_slot, state_splice
+
+__all__ = [
+    "Request", "ServeConfig", "ServingEngine",
+    "FleetScheduler", "SchedulerConfig",
+    "state_extract", "state_reset_slot", "state_splice",
+]

@@ -1,0 +1,92 @@
+"""Fleet-level request scheduling with straggler mitigation.
+
+Routes requests across serving replicas, tracking per-replica EWMA step latency.
+A replica whose in-flight request exceeds ``straggler_factor``x its EWMA is flagged;
+flagged work is re-dispatched to the fastest healthy replica (backup-request
+strategy), and repeatedly-flagged replicas are quarantined and replaced through the
+WarmSwap pool (fast re-warm — the recovery path fault_tolerance.py measures).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ReplicaHealth:
+    ewma_s: float = 0.0
+    n: int = 0
+    flags: int = 0
+    quarantined: bool = False
+
+    def observe(self, dt: float, alpha: float = 0.2) -> None:
+        self.ewma_s = dt if self.n == 0 else (1 - alpha) * self.ewma_s + alpha * dt
+        self.n += 1
+
+
+@dataclass
+class SchedulerConfig:
+    straggler_factor: float = 3.0
+    min_observations: int = 5
+    quarantine_after_flags: int = 3
+
+
+class FleetScheduler:
+    """Dispatch + straggler handling over a set of named replicas."""
+
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.health: Dict[str, ReplicaHealth] = {}
+        self.dispatch_log: List[tuple] = []
+
+    def register_replica(self, name: str) -> None:
+        self.health.setdefault(name, ReplicaHealth())
+
+    def remove_replica(self, name: str) -> None:
+        self.health.pop(name, None)
+
+    def healthy(self) -> List[str]:
+        return [n for n, h in self.health.items() if not h.quarantined]
+
+    def pick(self) -> Optional[str]:
+        """Least-loaded-ish: lowest EWMA among healthy replicas."""
+        h = self.healthy()
+        if not h:
+            return None
+        return min(h, key=lambda n: (self.health[n].ewma_s, n))
+
+    def observe(self, name: str, dt: float) -> bool:
+        """Record a completed unit of work; returns True if it was a straggler."""
+        rh = self.health[name]
+        is_straggler = (rh.n >= self.cfg.min_observations and
+                        dt > self.cfg.straggler_factor * max(rh.ewma_s, 1e-9))
+        rh.observe(dt)
+        if is_straggler:
+            rh.flags += 1
+            if rh.flags >= self.cfg.quarantine_after_flags:
+                rh.quarantined = True
+        return is_straggler
+
+    def run(self, work: List[Callable[[], float]],
+            execute: Callable[[str, Callable], float]) -> Dict[str, int]:
+        """Dispatch work items; re-dispatch stragglers once to the best other
+        replica. ``execute(replica, item)`` returns measured seconds."""
+        counts: Dict[str, int] = collections.Counter()
+        for item in work:
+            name = self.pick()
+            if name is None:
+                raise RuntimeError("no healthy replicas")
+            dt = execute(name, item)
+            counts[name] += 1
+            if self.observe(name, dt):
+                backup = self.pick()
+                if backup is not None and backup != name:
+                    dt2 = execute(backup, item)          # backup request
+                    self.observe(backup, dt2)
+                    counts[backup] += 1
+                    self.dispatch_log.append(("redispatch", name, backup))
+        return dict(counts)

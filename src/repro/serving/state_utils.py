@@ -1,0 +1,49 @@
+"""Decode-state surgery for continuous batching.
+
+The batched decode state stores the batch dimension at axis 1 for unit-stacked leaves
+(``unit``/``cross``: (n_units, B, ...)) and axis 0 elsewhere (``rem`` leaves, ``pos``).
+These helpers splice a single request's state into / out of a batch slot and reset
+slots, using the same path rules as the sharding layer.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_axis(path) -> int:
+    kp = jax.tree_util.keystr(path)
+    return 1 if (kp.startswith("['unit']") or "cross" in kp) else 0
+
+
+def state_splice(batched: Any, single: Any, slot: int) -> Any:
+    """Insert ``single`` (batch size 1) into ``batched`` at ``slot``."""
+    def ins(path, b, s):
+        ax = _batch_axis(path)
+        return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype), slot, axis=ax) \
+            if b.ndim > 0 else s
+    return jax.tree_util.tree_map_with_path(ins, batched, single)
+
+
+def state_extract(batched: Any, slot: int) -> Any:
+    """Extract a single-request view (batch size 1) from ``batched``."""
+    def ext(path, b):
+        ax = _batch_axis(path)
+        return jax.lax.dynamic_slice_in_dim(b, slot, 1, axis=ax) if b.ndim > 0 else b
+    return jax.tree_util.tree_map_with_path(ext, batched)
+
+
+def state_reset_slot(batched: Any, slot: int) -> Any:
+    """Clear one slot: caches emptied (k_pos = -1), states zeroed, pos = 0."""
+    def rst(path, b):
+        if b.ndim == 0:
+            return b
+        ax = _batch_axis(path)
+        idx = [slice(None)] * b.ndim
+        idx[ax] = slot
+        fill = -1 if (b.dtype == jnp.int32 and "k_pos" in jax.tree_util.keystr(path)) \
+            else 0
+        return b.at[tuple(idx)].set(fill)
+    return jax.tree_util.tree_map_with_path(rst, batched)

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see the single real device; ONLY the dry-run launcher
+# forces 512 host devices (and it does so in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,111 @@
+"""Attention unit tests: blockwise == naive, ring-buffer cache semantics,
+banded sliding-window path, cache build/update invariants + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    KVCache,
+    blockwise_attention,
+    build_cache_from_prefill,
+    decode_attention,
+    empty_cache,
+    update_cache,
+)
+from repro.configs import get_reduced
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _naive(q, k, v, causal, window, cap):
+    from repro.kernels.flash_attention.ref import attention_ref
+    return attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                         softcap=cap).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("S,q_chunk,window,cap", [
+    (64, 16, None, None), (100, 32, 24, None), (128, 128, None, 30.0),
+    (257, 64, 32, None),
+])
+def test_blockwise_matches_naive(S, q_chunk, window, cap):
+    B, H, Hkv, d = 2, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, Hkv, d))
+    v = jax.random.normal(ks[2], (B, S, Hkv, d))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = blockwise_attention(q, k, v, q_positions=pos, k_positions=pos,
+                              causal=True, window=window, attn_softcap=cap,
+                              q_chunk=q_chunk)
+    ref = _naive(q, k, v, True, window, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(1, 40), st.integers(4, 16))
+@settings(max_examples=20, deadline=None)
+def test_ring_cache_holds_last_C_positions(S, C):
+    """After prefilling S tokens into capacity C, the cache holds exactly the last
+    min(S, C) positions, each at slot p % C."""
+    B, Hkv, hd = 1, 2, 4
+    k = jnp.arange(S, dtype=jnp.float32)[None, :, None, None] * jnp.ones((B, S, Hkv, hd))
+    cache = build_cache_from_prefill(k, k, C)          # cache layout (B, Hkv, C, hd)
+    kp = np.asarray(cache.k_pos[0])
+    want = set(range(max(0, S - C), S))
+    got = set(int(p) for p in kp if p >= 0)
+    assert got == want
+    for slot, p in enumerate(kp):
+        if p >= 0:
+            assert p % C == slot                      # ring alignment invariant
+            assert float(cache.k[0, 0, slot, 0]) == float(p)  # value matches position
+
+
+@given(st.integers(1, 30), st.integers(4, 12), st.integers(1, 20))
+@settings(max_examples=20, deadline=None)
+def test_ring_cache_decode_updates(S, C, n_steps):
+    """Continuing with single-token updates preserves the last-C invariant."""
+    B, Hkv, hd = 1, 1, 2
+    k = jnp.arange(S, dtype=jnp.float32)[None, :, None, None] * jnp.ones((B, S, Hkv, hd))
+    cache = build_cache_from_prefill(k, k, C)
+    for step in range(n_steps):
+        p = S + step
+        newk = jnp.full((B, 1, Hkv, hd), float(p))
+        cache = update_cache(cache, newk, newk, jnp.full((B,), p, jnp.int32))
+    kp = np.asarray(cache.k_pos[0])
+    total = S + n_steps
+    want = set(range(max(0, total - C), total))
+    assert set(int(p) for p in kp if p >= 0) == want
+
+
+def test_decode_attention_ignores_invalid_slots():
+    B, H, Hkv, C, hd = 1, 2, 2, 8, 4
+    cache = empty_cache(get_reduced("qwen3_1_7b"), "global", B, C, jnp.float32)
+    # write two positions; leave rest empty
+    k1 = jax.random.normal(KEY, (B, 1, Hkv, 16))[..., :hd] * 0 + 1.0
+    cache = KVCache(jnp.zeros((B, Hkv, C, hd)), jnp.zeros((B, Hkv, C, hd)),
+                    jnp.full((B, C), -1, jnp.int32))
+    cache = update_cache(cache, jnp.ones((B, 1, Hkv, hd)),
+                         jnp.ones((B, 1, Hkv, hd)) * 5.0, jnp.zeros((B,), jnp.int32))
+    q = jnp.ones((B, 1, H, hd))
+    out = decode_attention(q, cache, jnp.zeros((B,), jnp.int32), window=None,
+                           attn_softcap=None)
+    # only one valid slot with v=5 -> output must be exactly 5
+    np.testing.assert_allclose(np.asarray(out), 5.0, atol=1e-5)
+
+
+def test_banded_equals_unbanded_for_long_window_seq():
+    """The banded (dynamic-slice) sliding-window path equals the full-mask path."""
+    B, H, Hkv, d, S, W = 1, 2, 1, 8, 300, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, Hkv, d))
+    v = jax.random.normal(ks[2], (B, S, Hkv, d))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    banded = blockwise_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                 causal=True, window=W, attn_softcap=None,
+                                 q_chunk=64)  # S > W + chunk -> banded path
+    ref = _naive(q, k, v, True, W, None)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)

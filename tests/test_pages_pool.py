@@ -1,0 +1,179 @@
+"""WarmSwap page/image/pool/migration behaviour + hypothesis property tests."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DependencyManager,
+    LinkModel,
+    RestorePolicy,
+    build_image,
+    materialize,
+    paginate,
+)
+from repro.core.pages import materialize_leaf
+
+
+# ---------------------------------------------------------------------------------
+# Property: paginate/materialize round-trips any pytree exactly
+# ---------------------------------------------------------------------------------
+
+@st.composite
+def pytrees(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    n = draw(st.integers(1, 6))
+    tree = {}
+    for i in range(n):
+        ndim = draw(st.integers(1, 3))
+        shape = tuple(draw(st.integers(1, 17)) for _ in range(ndim))
+        dt = draw(st.sampled_from(["float32", "int32", "bfloat16", "uint8"]))
+        if dt == "bfloat16":
+            import ml_dtypes
+            arr = rng.standard_normal(shape).astype(ml_dtypes.bfloat16)
+        else:
+            arr = (rng.standard_normal(shape) * 100).astype(dt)
+        tree[f"leaf{i}"] = arr if i % 2 == 0 else {"nested": arr}
+    return tree
+
+
+@given(pytrees(), st.sampled_from([128, 4096, 1 << 20]))
+@settings(max_examples=25, deadline=None)
+def test_paginate_roundtrip_property(tree, page_size):
+    store, table, treedef = paginate(tree, page_size=page_size)
+    out = materialize(store, table, treedef)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(np.asarray(a).view(np.uint8),
+                              np.asarray(b).view(np.uint8))
+
+
+@given(pytrees())
+@settings(max_examples=10, deadline=None)
+def test_metadata_much_smaller_than_image(tree):
+    """Paper Table 3: process metadata << dependency image (for non-trivial images)."""
+    store, table, treedef = paginate(tree, page_size=4096)
+    if table.nbytes_payload > 100_000:
+        assert table.metadata_bytes() < table.nbytes_payload / 5
+
+
+def _params(seed=0, d=64):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (d, d)),
+            "b": {"w": jax.random.normal(k, (d, 4 * d)),
+                  "scale": jnp.zeros((d,))}}
+
+
+# ---------------------------------------------------------------------------------
+# Migration policies
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", list(RestorePolicy))
+def test_all_policies_restore_identical_params(policy):
+    mgr = DependencyManager()
+    mgr.register_image("img", "test", lambda: _params())
+    restored = mgr.request_migration("img", policy)
+    out = restored.as_pytree()
+    for a, b in zip(jax.tree_util.tree_leaves(_params()),
+                    jax.tree_util.tree_leaves(out)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_lazy_restore_transfers_only_touched_pages():
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params(d=128))
+    restored = mgr.request_migration("img", RestorePolicy.LAZY)
+    key = restored.metadata.page_table.order[0]
+    restored.fault(key)
+    total_pages = restored.metadata.page_table.n_pages
+    assert restored.stats.pages_transferred < total_pages
+    assert restored.resident_fraction() < 1.0
+
+
+def test_bulk_restore_streams_everything_after_first_fault():
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params(d=128))
+    restored = mgr.request_migration("img", RestorePolicy.BULK)
+    restored.fault(restored.metadata.page_table.order[0])
+    restored.wait_all()
+    assert restored.resident_fraction() == 1.0
+    assert restored.stats.pages_transferred == restored.metadata.page_table.n_pages
+
+
+def test_no_pageserver_is_one_big_request():
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params())
+    restored = mgr.request_migration("img", RestorePolicy.NO_PAGESERVER)
+    assert restored.stats.requests == 1
+    assert restored.resident_fraction() == 1.0
+
+
+# ---------------------------------------------------------------------------------
+# Pool behaviour
+# ---------------------------------------------------------------------------------
+
+def test_pool_shares_one_image_across_functions():
+    """Pool memory is O(#images), not O(#functions) — the paper's core claim."""
+    mgr = DependencyManager()
+    mgr.register_image("shared", "test", lambda: _params(d=128))
+    size_one = mgr.pool_bytes()
+    for _ in range(10):
+        r = mgr.request_migration("shared", RestorePolicy.BULK)
+        r.as_pytree()
+        mgr.release("shared")
+    assert mgr.pool_bytes() == size_one
+    assert mgr.stats.builds == 1
+
+
+def test_pool_evict_to_disk_and_revive():
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = DependencyManager(disk_dir=tmp)
+        mgr.register_image("img", "test", lambda: _params(seed=3))
+        before = mgr.request_migration("img", RestorePolicy.BULK).as_pytree()
+        mgr.release("img")
+        mgr.evict("img")
+        assert not mgr.has_live("img")
+        after = mgr.request_migration("img", RestorePolicy.BULK).as_pytree()
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(after)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert mgr.stats.revivals == 1
+        assert mgr.stats.builds == 1  # revive did NOT re-run initialization
+
+
+def test_pool_capacity_lru_eviction():
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = DependencyManager(capacity_bytes=1 << 20, disk_dir=tmp,
+                                page_size=4096)
+        mgr.register_image("a", "t", lambda: _params(seed=1, d=128))  # ~330KB
+        mgr.register_image("b", "t", lambda: _params(seed=2, d=128))
+        mgr.register_image("c", "t", lambda: _params(seed=3, d=128))
+        mgr.register_image("d", "t", lambda: _params(seed=4, d=128))
+        assert mgr.pool_bytes() <= 1 << 20
+        assert mgr.stats.evictions >= 1
+
+
+def test_reshard_image_preserves_values():
+    mgr = DependencyManager()
+    mgr.register_image("img", "test", lambda: _params(seed=5))
+    orig = mgr.request_migration("img", RestorePolicy.BULK).as_pytree()
+    mgr.release("img")
+    mgr.reshard_image("img", lambda p: jax.tree.map(np.asarray, p))
+    again = mgr.request_migration("img", RestorePolicy.BULK).as_pytree()
+    for a, b in zip(jax.tree_util.tree_leaves(orig),
+                    jax.tree_util.tree_leaves(again)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_remote_link_adds_latency():
+    mgr = DependencyManager()
+    mgr.register_image("img", "test", lambda: _params(d=256))
+    import time
+    t0 = time.perf_counter()
+    r = mgr.request_migration("img", RestorePolicy.NO_LAZY,
+                              LinkModel(latency_s=0.005))
+    local = time.perf_counter() - t0
+    assert local >= 0.005  # at least the per-request latency

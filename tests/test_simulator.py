@@ -1,0 +1,111 @@
+"""Keep-alive math (§2.2), trace generation and the fleet simulator (§4.5),
+including hypothesis property tests on the simulator's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.keepalive import (
+    argmax_rate,
+    expected_cold_starts,
+    p_no_invocation,
+    worth_function_specific_tuning,
+)
+from repro.core.simulator import CostModel, memory_saving_fraction, quartile_latencies, simulate
+from repro.core.traces import Trace, generate_traces, quartile_groups, sample_rates
+
+
+# ---------------------------------------------------------------------------------
+# §2.2 arrival math
+# ---------------------------------------------------------------------------------
+
+@given(st.floats(1e-5, 10.0), st.floats(1.0, 60.0))
+@settings(max_examples=50, deadline=None)
+def test_ecs_maximized_at_inverse_keepalive(lam, T):
+    """Eq. 2 is maximized at λ* = 1/T (paper Fig. 1)."""
+    star = argmax_rate(T)
+    e_star = expected_cold_starts(star, T, 1440)
+    assert expected_cold_starts(lam, T, 1440) <= e_star + 1e-9
+
+
+def test_paper_headline_numbers():
+    """>50% of fns see <1.4 cold starts/day at T=15min with rate<=0.001/min."""
+    e = float(expected_cold_starts(0.001, 15.0, 1440))
+    assert e < 1.45            # paper: "<1.4" for the >50% of fns BELOW 0.001/min
+    assert float(expected_cold_starts(0.0009, 15.0, 1440)) < 1.4
+    assert p_no_invocation(0.0, 15.0) == 1.0
+    # frequent functions basically never cold start
+    assert float(expected_cold_starts(10.0, 15.0, 1440)) < 1e-50
+
+
+def test_tuning_economics():
+    """Eq. 3: long-tail functions don't justify function-specific tuning."""
+    assert not worth_function_specific_tuning(0.001, 15, 1440, benefit_per_cs=1.0,
+                                              cost=10.0)
+    assert worth_function_specific_tuning(1 / 15, 15, 1440, benefit_per_cs=1.0,
+                                          cost=10.0)
+
+
+# ---------------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------------
+
+def test_rate_distribution_matches_azure_statistics():
+    rates = sample_rates(20_000, seed=1)
+    assert abs(np.median(rates) / 0.001 - 1) < 0.15       # median ~0.001/min
+    assert abs(np.quantile(rates, 0.75) / 0.04 - 1) < 0.2  # P75 ~0.04/min
+
+
+def test_traces_deterministic():
+    t1 = generate_traces(5, horizon_min=1000, seed=42)
+    t2 = generate_traces(5, horizon_min=1000, seed=42)
+    for a, b in zip(t1, t2):
+        assert np.array_equal(a.arrivals_min, b.arrivals_min)
+
+
+def test_quartile_groups_partition():
+    traces = generate_traces(40, horizon_min=100, seed=0)
+    groups = quartile_groups(traces)
+    total = sum(len(g) for g in groups.values())
+    assert total == len(traces)
+
+
+# ---------------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.floats(1.0, 30.0))
+@settings(max_examples=20, deadline=None)
+def test_cold_plus_warm_equals_invocations(seed, keepalive):
+    from repro.core.keepalive import KeepAlivePolicy
+    traces = generate_traces(8, horizon_min=2000, seed=seed)
+    r = simulate(traces, "warmswap", CostModel.paper_table2(),
+                 KeepAlivePolicy(keepalive))
+    n_total = sum(len(t.arrivals_min) for t in traces)
+    assert r.n_cold + r.n_warm == n_total == r.n_invocations
+    assert r.n_cold >= sum(1 for t in traces if len(t.arrivals_min) > 0)
+
+
+def test_longer_keepalive_fewer_cold_starts():
+    from repro.core.keepalive import KeepAlivePolicy
+    traces = generate_traces(20, horizon_min=5000, seed=3)
+    cm = CostModel.paper_table2()
+    cold = [simulate(traces, "baseline", cm, KeepAlivePolicy(T)).n_cold
+            for T in (5.0, 15.0, 60.0)]
+    assert cold[0] >= cold[1] >= cold[2]
+
+
+def test_fig7_reproduction():
+    """WarmSwap beats Prebaking on latency and saves ~88-89% memory for 10 fns
+    sharing one image (paper §4.5 headline)."""
+    traces = generate_traces(10, horizon_min=2 * 7 * 24 * 60, seed=0)
+    cm = CostModel.paper_table2()
+    rw = simulate(traces, "warmswap", cm)
+    rp = simulate(traces, "prebaking", cm)
+    rb = simulate(traces, "baseline", cm)
+    assert rw.avg_latency_s <= rp.avg_latency_s <= rb.avg_latency_s
+    saving = memory_saving_fraction(rw, rp)
+    assert 0.85 < saving < 0.92
+    ql = quartile_latencies(traces, rw)
+    assert set(ql) == {"lowest", "25-50%", "50-75%", "highest"}
+    # latency decreases as invocation rate rises (more warm starts), Fig. 7-left
+    assert ql["highest"] <= ql["lowest"] + 1e-9
