@@ -1,0 +1,142 @@
+"""Fleet-scale simulation sweep: workers x pool-capacity x skew x sharing-degree.
+
+Extends bench_sharing (single worker, Fig. 7) into the design space the paper's
+fleet-level claims live in: per-method (WarmSwap / Prebaking / Baseline)
+latency quartiles, peak resident memory, pool-miss/eviction behaviour, and the
+pre-warm-policy comparison — all under identical image-affinity placement.
+
+Also re-derives Fig. 7 as the degenerate point (1 worker, unlimited capacity,
+one instance per function) and checks it against ``simulator.simulate()``,
+including the ~88 % memory-saving headline at sharing degree 10.
+
+    PYTHONPATH=src python -m benchmarks.run --only fleet [--smoke]
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit, save_json, smoke_mode
+
+METHODS = ("warmswap", "prebaking", "baseline")
+
+
+def _cell(traces, cm, fleet, label: str) -> Dict:
+    from repro.core.fleet import simulate_fleet
+    from repro.core.simulator import quartile_latencies
+
+    out: Dict = {}
+    for method in METHODS:
+        r = simulate_fleet(traces, method, cm, fleet)
+        out[method] = {
+            "avg_latency_s": r.avg_latency_s,
+            "quartile_latency_s": quartile_latencies(traces, r),
+            "peak_memory_mb": r.memory_bytes / 1e6,
+            "cold": r.n_cold, "warm": r.n_warm,
+            "pool_misses": r.pool_misses, "evictions": r.evictions,
+            "max_concurrent_instances": r.max_concurrent_instances,
+            "instance_resident_min": r.instance_resident_min,
+        }
+        emit(f"fleet/{label}/{method}", r.avg_latency_s * 1e6,
+             f"mem={r.memory_bytes / 1e6:.0f}MB cold={r.n_cold} "
+             f"miss={r.pool_misses} evict={r.evictions}")
+    return out
+
+
+def run() -> Dict:
+    from repro.core.fleet import FleetConfig, simulate_fleet
+    from repro.core.keepalive import KeepAlivePolicy
+    from repro.core.simulator import CostModel, memory_saving_fraction, simulate
+    from repro.core.traces import (generate_fleet_traces, generate_traces,
+                                   sharing_degrees)
+
+    cm = CostModel.paper_table2()
+    smoke = smoke_mode()
+    out: Dict = {}
+
+    # ------------------------------------------------------------- degenerate point
+    # 1 worker, unlimited capacity, 1 instance/function == simulate() == Fig. 7.
+    traces10 = generate_traces(10, horizon_min=(1 if smoke else 14) * 24 * 60,
+                               seed=0)
+    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    degenerate: Dict = {}
+    for method in METHODS:
+        rf = simulate_fleet(traces10, method, cm, deg)
+        rs = simulate(traces10, method, cm, KeepAlivePolicy(15.0))
+        drift = abs(rf.total_latency_s - rs.total_latency_s)
+        degenerate[method] = {
+            "fleet_avg_latency_s": rf.avg_latency_s,
+            "simulate_avg_latency_s": rs.avg_latency_s,
+            "latency_drift_s": drift,
+            "memory_match": rf.memory_bytes == rs.memory_bytes,
+        }
+        assert drift < 1e-6 and rf.memory_bytes == rs.memory_bytes, \
+            f"degenerate fleet sim diverged from simulate() for {method}"
+    saving = memory_saving_fraction(
+        simulate_fleet(traces10, "warmswap", cm, deg),
+        simulate_fleet(traces10, "prebaking", cm, deg))
+    degenerate["memory_saving_vs_prebaking"] = saving
+    emit("fleet/degenerate/headline", saving * 100,
+         "memory_saving_pct at sharing degree 10 (paper: 88)")
+    out["degenerate"] = degenerate
+
+    # ------------------------------------------------------------------ the sweep
+    n_fns = 12 if smoke else 40
+    horizon = (1 if smoke else 7) * 24 * 60
+    base = dict(n_functions=n_fns, horizon_min=horizon, seed=1, n_images=4,
+                rate_model="zipf", total_rate_per_min=6.0)
+    base_fleet = dict(worker_capacity_bytes=2 * cm.image_bytes)
+
+    sweeps: Dict[str, List] = {
+        "workers": [1, 4] if smoke else [1, 2, 4, 8],
+        "capacity_images": [2] if smoke else [1, 2, 4, None],
+        "sharing_images": [4] if smoke else [1, 2, 5, 10],
+        "rate_skew": [1.1] if smoke else [0.6, 1.1, 1.6],
+    }
+
+    out["sweep"] = {}
+    for w in sweeps["workers"]:
+        traces = generate_fleet_traces(**base)
+        out["sweep"][f"workers={w}"] = _cell(
+            traces, cm, FleetConfig(n_workers=w, **base_fleet), f"workers={w}")
+    for cap in sweeps["capacity_images"]:
+        traces = generate_fleet_traces(**base)
+        cfg = FleetConfig(n_workers=4, worker_capacity_bytes=(
+            None if cap is None else cap * cm.image_bytes))
+        out["sweep"][f"capacity={cap}"] = _cell(traces, cm, cfg,
+                                                f"capacity={cap}")
+    for n_img in sweeps["sharing_images"]:
+        traces = generate_fleet_traces(**{**base, "n_images": n_img})
+        cfg = FleetConfig(n_workers=4, **base_fleet)
+        cell = _cell(traces, cm, cfg, f"images={n_img}")
+        cell["sharing_degrees"] = sharing_degrees(traces)
+        out["sweep"][f"images={n_img}"] = cell
+    for s in sweeps["rate_skew"]:
+        traces = generate_fleet_traces(**{**base, "rate_skew": s})
+        out["sweep"][f"skew={s}"] = _cell(
+            traces, cm, FleetConfig(n_workers=4, **base_fleet), f"skew={s}")
+
+    # ------------------------------------------------------- placement + pre-warm
+    traces = generate_fleet_traces(**base)
+    out["placement"] = {}
+    for placement in ("affinity", "least_loaded", "round_robin"):
+        cfg = FleetConfig(n_workers=4, placement=placement, **base_fleet)
+        out["placement"][placement] = _cell(traces, cm, cfg,
+                                            f"placement={placement}")
+    out["prewarm"] = {}
+    for pw in ("none", "histogram", "spes"):
+        r = simulate_fleet(traces, "warmswap", cm,
+                           FleetConfig(n_workers=4, prewarm=pw, **base_fleet))
+        out["prewarm"][pw] = {
+            "avg_latency_s": r.avg_latency_s, "cold": r.n_cold,
+            "prewarm_spawns": r.prewarm_spawns, "prewarm_hits": r.prewarm_hits,
+            "instance_resident_min": r.instance_resident_min,
+        }
+        emit(f"fleet/prewarm={pw}/warmswap", r.avg_latency_s * 1e6,
+             f"cold={r.n_cold} resident_min={r.instance_resident_min:.0f}")
+
+    save_json("bench_fleet", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ import json
 import os
 from typing import Dict
 
-from benchmarks.common import RESULTS_DIR, emit, save_json
+from benchmarks.common import RESULTS_DIR, emit, save_json, smoke_mode
 
 
 def _measured_cost_model():
@@ -37,7 +37,8 @@ def run() -> Dict:
                                       quartile_latencies, simulate)
     from repro.core.traces import generate_traces
 
-    traces = generate_traces(10, horizon_min=2 * 7 * 24 * 60, seed=0)
+    horizon_min = (24 * 60 if smoke_mode() else 2 * 7 * 24 * 60)
+    traces = generate_traces(10, horizon_min=horizon_min, seed=0)
     out: Dict = {}
     models = {"paper_costs": CostModel.paper_table2()}
     measured = _measured_cost_model()

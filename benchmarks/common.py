@@ -10,6 +10,11 @@ from typing import Dict, List, Optional
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+def smoke_mode() -> bool:
+    """True when the driver was invoked with ``--smoke`` (CI-sized runs)."""
+    return os.environ.get("REPRO_SMOKE") == "1"
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The assignment's CSV contract: ``name,us_per_call,derived``."""
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -9,24 +9,36 @@ results/.  Mapping to the paper:
     bench_policies   ->  Table 2 (bulk / lazy / no-pageserver / no-lazy)
     bench_metadata   ->  Table 3 (metadata vs image size)
     bench_sharing    ->  Fig. 7 + 88% memory headline (Azure-trace simulation)
+    bench_fleet      ->  multi-worker fleet sweep (workers x capacity x skew x
+                         sharing), placement + pre-warm policy comparison
     bench_kernels    ->  kernel-path microbenches + VMEM accounting
     bench_roofline   ->  assignment §Roofline table (from dry-run artifacts)
+
+``--smoke`` shrinks the simulation suites (sharing, fleet) to CI size; the
+measurement suites (coldstart, policies, kernels, ...) always do real work.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
 
-BENCHES = ["coldstart", "policies", "metadata", "sharing", "kernels", "roofline"]
+BENCHES = ["coldstart", "policies", "metadata", "sharing", "fleet", "kernels",
+           "roofline"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma-separated subset of {BENCHES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs for the simulation suites "
+                         "(sharing, fleet); pair with --only")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_SMOKE"] = "1"
     todo = args.only.split(",") if args.only else BENCHES
 
     print("name,us_per_call,derived")

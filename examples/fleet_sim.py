@@ -1,0 +1,76 @@
+"""Fleet simulation tour: concurrency, placement, capacity, pre-warm policies.
+
+Walks the multi-worker simulator (repro.core.fleet) through the questions the
+single-worker model (repro.core.simulator) cannot answer:
+
+  1. Degenerate check — 1 worker / 1 instance per function reproduces the
+     paper's Fig. 7 numbers, including the ~88 % memory-saving headline.
+  2. Does image-affinity placement beat round-robin on a skewed workload?
+  3. What does pool capacity pressure do to each method?
+  4. How do keep-alive / pre-warm policies trade latency for residency?
+
+    PYTHONPATH=src python examples/fleet_sim.py
+"""
+from repro.core import CostModel, FleetConfig, KeepAlivePolicy, simulate, simulate_fleet
+from repro.core.simulator import memory_saving_fraction
+from repro.core.traces import generate_fleet_traces, generate_traces, sharing_degrees
+
+
+def main() -> None:
+    cm = CostModel.paper_table2()
+
+    # --- 1. degenerate point == the paper's simulation --------------------------
+    traces10 = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
+    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    rw, rp = (simulate_fleet(traces10, m, cm, deg)
+              for m in ("warmswap", "prebaking"))
+    ref = simulate(traces10, "warmswap", cm, KeepAlivePolicy(15.0))
+    print(f"degenerate: fleet avg {rw.avg_latency_s * 1e3:.2f} ms "
+          f"== simulate() {ref.avg_latency_s * 1e3:.2f} ms; "
+          f"memory saving {memory_saving_fraction(rw, rp) * 100:.1f} % "
+          f"(paper: 88 %)\n")
+
+    # --- a skewed 40-function fleet over 4 shared images ------------------------
+    traces = generate_fleet_traces(40, horizon_min=7 * 24 * 60, seed=1,
+                                   n_images=4, rate_model="zipf",
+                                   total_rate_per_min=6.0)
+    print(f"fleet workload: 40 fns, sharing degrees {sharing_degrees(traces)}")
+
+    # --- 2. placement policies under identical everything else ------------------
+    print("\nplacement (4 workers, pool capacity = 2 images each, warmswap):")
+    for placement in ("affinity", "least_loaded", "round_robin"):
+        cfg = FleetConfig(n_workers=4, placement=placement,
+                          worker_capacity_bytes=2 * cm.image_bytes)
+        r = simulate_fleet(traces, "warmswap", cm, cfg)
+        print(f"  {placement:13s} avg {r.avg_latency_s * 1e3:7.1f} ms | "
+              f"cold {r.n_cold:5d} | pool misses {r.pool_misses:4d} | "
+              f"evictions {r.evictions:4d} | peak mem {r.memory_bytes >> 20} MB")
+
+    # --- 3. capacity pressure per method ----------------------------------------
+    print("\npool capacity (4 workers, affinity):")
+    for cap in (1, 2, None):
+        cfg = FleetConfig(n_workers=4, worker_capacity_bytes=(
+            None if cap is None else cap * cm.image_bytes))
+        row = []
+        for method in ("warmswap", "prebaking", "baseline"):
+            r = simulate_fleet(traces, method, cm, cfg)
+            row.append(f"{method} {r.avg_latency_s * 1e3:6.1f} ms/"
+                       f"{r.memory_bytes >> 20:4d} MB")
+        print(f"  {str(cap or 'unlimited'):>9s} images/worker: " + " | ".join(row))
+
+    # --- 4. pre-warm policies ----------------------------------------------------
+    print("\npre-warm policy (4 workers, warmswap): latency vs residency")
+    for pw in ("none", "histogram", "spes"):
+        cfg = FleetConfig(n_workers=4, prewarm=pw)
+        r = simulate_fleet(traces, "warmswap", cm, cfg)
+        print(f"  {pw:9s} avg {r.avg_latency_s * 1e3:7.1f} ms | "
+              f"cold {r.n_cold:5d} | warm-instance residency "
+              f"{r.instance_resident_min:9.0f} inst-min | "
+              f"prewarm spawns/hits {r.prewarm_spawns}/{r.prewarm_hits}")
+    print("\nconcurrency: arrivals overlapping a busy instance spawn new ones "
+          "(peak concurrent instances of one function above: "
+          f"{simulate_fleet(traces, 'warmswap', cm, FleetConfig(n_workers=4)).max_concurrent_instances})")
+
+
+if __name__ == "__main__":
+    main()

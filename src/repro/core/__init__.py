@@ -7,27 +7,34 @@ Public API:
   * migration   — PageServer + MigrationClient, 4 restore policies (Table 2)
   * registry    — FunctionRegistry (endpoints = image ref + private handler)
   * coldstart   — ColdStartOrchestrator with per-phase timers (Figs. 3/6)
-  * keepalive   — E_cs(λ) arrival math (§2.2)
-  * traces      — Azure-statistics trace generation (§4.5)
-  * simulator   — fleet simulation: WarmSwap vs Prebaking vs Baseline (Fig. 7)
+  * keepalive   — E_cs(λ) arrival math (§2.2) + pluggable pre-warm policies
+  * traces      — Azure-statistics / Zipf fleet trace generation (§4.5)
+  * simulator   — single-worker simulation: WarmSwap vs Prebaking vs Baseline (Fig. 7)
+  * fleet       — multi-worker fleet simulation: concurrency, placement, capacity
   * workloads   — FunctionBench-analogue suite (Table 1)
 """
 from repro.core.coldstart import ColdStartConfig, ColdStartOrchestrator, PhaseTimes
+from repro.core.fleet import FleetConfig, FleetResult, simulate_fleet
 from repro.core.image import ImageMetadata, LiveDependencyImage, build_image
-from repro.core.keepalive import KeepAlivePolicy, expected_cold_starts
+from repro.core.keepalive import (HistogramKeepAlive, KeepAlivePolicy,
+                                  PrewarmPolicy, SpesPrewarm,
+                                  expected_cold_starts)
 from repro.core.migration import LinkModel, MigrationClient, PageServer, RestorePolicy
 from repro.core.pages import PageTable, materialize, paginate
-from repro.core.pool import DependencyManager
+from repro.core.pool import CapacityLedger, DependencyManager
 from repro.core.registry import FunctionRegistry
 from repro.core.simulator import CostModel, memory_saving_fraction, simulate
-from repro.core.traces import generate_traces
+from repro.core.traces import generate_fleet_traces, generate_traces
 
 __all__ = [
     "ColdStartConfig", "ColdStartOrchestrator", "PhaseTimes",
+    "FleetConfig", "FleetResult", "simulate_fleet",
     "ImageMetadata", "LiveDependencyImage", "build_image",
     "KeepAlivePolicy", "expected_cold_starts",
+    "PrewarmPolicy", "HistogramKeepAlive", "SpesPrewarm",
     "LinkModel", "MigrationClient", "PageServer", "RestorePolicy",
     "PageTable", "materialize", "paginate",
-    "DependencyManager", "FunctionRegistry",
-    "CostModel", "memory_saving_fraction", "simulate", "generate_traces",
+    "CapacityLedger", "DependencyManager", "FunctionRegistry",
+    "CostModel", "memory_saving_fraction", "simulate",
+    "generate_traces", "generate_fleet_traces",
 ]

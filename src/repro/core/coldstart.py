@@ -90,10 +90,12 @@ class FunctionInstance:
 
 class ColdStartOrchestrator:
     def __init__(self, manager: DependencyManager, registry: FunctionRegistry,
-                 cfg: ColdStartConfig = ColdStartConfig()):
+                 cfg: Optional[ColdStartConfig] = None):
         self.manager = manager
         self.registry = registry
-        self.cfg = cfg
+        # a fresh config per orchestrator: a shared default instance would leak
+        # policy/link mutations across orchestrators
+        self.cfg = cfg if cfg is not None else ColdStartConfig()
         # Prebaking store: per-function full snapshots in RAM (paper stores them in
         # memory "to enhance fairness", §4.5)
         self._prebaked: Dict[str, Dict[str, Any]] = {}

@@ -46,3 +46,100 @@ class KeepAlivePolicy:
 
     def expires_at(self, last_use_min: float) -> float:
         return last_use_min + self.keep_alive_min
+
+
+# ---------------------------------------------------------------------------------
+# Pluggable pre-warm policies for the fleet simulator (core/fleet.py).
+#
+# A policy answers two questions per function, from its observed arrival history:
+#   * keep_alive_min(fn)  — how long an idle instance stays warm after completion;
+#   * prewarm_after(fn,t) — optionally, a (spawn_at, expire_at) window in which a
+#     predictively pre-warmed instance should be standing by for the next arrival.
+# ---------------------------------------------------------------------------------
+
+class PrewarmPolicy:
+    """Base: fixed keep-alive (the paper's §4.5 setting), no prediction."""
+
+    name = "none"
+
+    def __init__(self, keep_alive_min: float = 15.0):
+        self._keep_alive_min = keep_alive_min
+        self._last_arrival: dict = {}
+        self._iats: dict = {}        # fn -> list of recent inter-arrival times (min)
+        self.max_history = 64
+
+    def on_arrival(self, fn: int, t_min: float) -> None:
+        last = self._last_arrival.get(fn)
+        if last is not None and t_min > last:
+            hist = self._iats.setdefault(fn, [])
+            hist.append(t_min - last)
+            if len(hist) > self.max_history:
+                del hist[0]
+        self._last_arrival[fn] = t_min
+
+    def keep_alive_min(self, fn: int) -> float:
+        return self._keep_alive_min
+
+    def prewarm_after(self, fn: int, t_min: float):
+        """Return (spawn_at_min, expire_at_min) for a predictive pre-warm, or
+        None. Called after each arrival has been served."""
+        return None
+
+
+class HistogramKeepAlive(PrewarmPolicy):
+    """Serverless-in-the-wild-style adaptive keep-alive: per function, keep the
+    instance warm for a high percentile of the observed inter-arrival times,
+    clamped to [lo, hi]. Rarely-invoked functions stop wasting memory on a
+    window they never hit; chatty functions get a window that covers them."""
+
+    name = "histogram"
+
+    def __init__(self, percentile: float = 99.0, lo_min: float = 1.0,
+                 hi_min: float = 60.0, min_samples: int = 4,
+                 default_min: float = 15.0):
+        super().__init__(keep_alive_min=default_min)
+        self.percentile = percentile
+        self.lo_min = lo_min
+        self.hi_min = hi_min
+        self.min_samples = min_samples
+
+    def keep_alive_min(self, fn: int) -> float:
+        hist = self._iats.get(fn, ())
+        if len(hist) < self.min_samples:
+            return self._keep_alive_min
+        ka = float(np.percentile(np.asarray(hist), self.percentile))
+        return min(max(ka, self.lo_min), self.hi_min)
+
+
+class SpesPrewarm(PrewarmPolicy):
+    """SPES-style (arXiv 2403.17574) predictive pre-warming: keep-alive is cut
+    short (cheap), and instead the next arrival is predicted from the median
+    inter-arrival time; an instance is pre-warmed shortly before the predicted
+    time and kept only for a margin around it. Trades a little spawn work for
+    much less idle residency on predictable functions."""
+
+    name = "spes"
+
+    def __init__(self, keep_alive_min: float = 2.0, margin_frac: float = 0.25,
+                 min_samples: int = 4, max_window_min: float = 120.0):
+        super().__init__(keep_alive_min=keep_alive_min)
+        self.margin_frac = margin_frac
+        self.min_samples = min_samples
+        self.max_window_min = max_window_min
+
+    def prewarm_after(self, fn: int, t_min: float):
+        hist = self._iats.get(fn, ())
+        if len(hist) < self.min_samples:
+            return None
+        med = float(np.median(np.asarray(hist)))
+        if med <= 0 or med > self.max_window_min:
+            return None                      # too unpredictable / too rare
+        margin = max(self.margin_frac * med, 1e-3)
+        return (t_min + med - margin, t_min + med + margin)
+
+
+PREWARM_POLICIES = {
+    "none": PrewarmPolicy,
+    "histogram": HistogramKeepAlive,
+    "spes": SpesPrewarm,
+}

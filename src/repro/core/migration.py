@@ -64,9 +64,10 @@ class MigrationStats:
 class PageServer:
     """Provider-side server bound to one live image (paper §3.2: one per target)."""
 
-    def __init__(self, image: LiveDependencyImage, link: LinkModel = LinkModel()):
+    def __init__(self, image: LiveDependencyImage,
+                 link: Optional[LinkModel] = None):
         self._image = image
-        self._link = link
+        self._link = link if link is not None else LinkModel()
         self.stats = MigrationStats()
         self._lock = threading.Lock()
 
@@ -177,8 +178,8 @@ class RestoredImage:
 class MigrationClient:
     """Container-side orchestrator (paper Fig. 4c)."""
 
-    def __init__(self, link: LinkModel = LinkModel()):
-        self.link = link
+    def __init__(self, link: Optional[LinkModel] = None):
+        self.link = link if link is not None else LinkModel()
 
     def migrate(
         self,

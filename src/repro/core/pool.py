@@ -39,19 +39,97 @@ class PoolStats:
     revive_s: float = 0.0
 
 
+@dataclass
+class LedgerEntry:
+    nbytes: int
+    last_used: float = 0.0
+    refcount: int = 0
+    pinned: bool = False
+
+
+class CapacityLedger:
+    """Pure capacity + LRU accounting over named residents.
+
+    This is the pool's admission/eviction *decision logic* factored out of
+    :class:`DependencyManager` so the fleet simulator (``core/fleet.py``) can
+    model one per-worker pool with exactly the same semantics the real manager
+    applies to live images: admit up to ``capacity_bytes``, evicting the
+    least-recently-used unpinned entry with no in-flight references first.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self.capacity_bytes = capacity_bytes
+        self.entries: Dict[str, LedgerEntry] = {}
+        self.evictions = 0
+
+    def holds(self, key: str) -> bool:
+        return key in self.entries
+
+    def used_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+    def touch(self, key: str, now: float) -> None:
+        if key in self.entries:
+            self.entries[key].last_used = now
+
+    def acquire(self, key: str) -> None:
+        if key in self.entries:
+            self.entries[key].refcount += 1
+
+    def release(self, key: str) -> None:
+        if key in self.entries:
+            self.entries[key].refcount = max(0, self.entries[key].refcount - 1)
+
+    def _pick_victim(self) -> Optional[str]:
+        candidates = [(e.last_used, k) for k, e in self.entries.items()
+                      if not e.pinned and e.refcount == 0]
+        return min(candidates)[1] if candidates else None
+
+    def admit(self, key: str, nbytes: int, now: float,
+              pinned: bool = False) -> list:
+        """Admit ``key``; returns the keys evicted to make room. The entry is
+        admitted even if eviction cannot free enough space (the pool never
+        refuses the image it was asked for — same as the manager)."""
+        if key in self.entries:
+            self.touch(key, now)
+            return []
+        evicted = []
+        if self.capacity_bytes is not None:
+            while self.used_bytes() + nbytes > self.capacity_bytes:
+                victim = self._pick_victim()
+                if victim is None:
+                    break
+                del self.entries[victim]
+                self.evictions += 1
+                evicted.append(victim)
+        self.entries[key] = LedgerEntry(nbytes=nbytes, last_used=now,
+                                        pinned=pinned)
+        return evicted
+
+    def evict(self, key: str) -> None:
+        self.entries.pop(key, None)
+
+    def resize(self, key: str, nbytes: int) -> None:
+        if key in self.entries:
+            self.entries[key].nbytes = nbytes
+
+
 class DependencyManager:
     def __init__(
         self,
         capacity_bytes: Optional[int] = None,
         disk_dir: Optional[str] = None,
-        link: LinkModel = LinkModel(),
+        link: Optional[LinkModel] = None,
         page_size: int = DEFAULT_PAGE_SIZE,
     ):
         self.capacity_bytes = capacity_bytes
         self.disk_dir = disk_dir
-        self.link = link
+        # per-manager default link: a shared class-level instance would leak
+        # latency/bandwidth mutations across managers
+        self.link = link if link is not None else LinkModel()
         self.page_size = page_size
         self._images: Dict[str, LiveDependencyImage] = {}
+        self._ledger = CapacityLedger(capacity_bytes)
         self._on_disk: Dict[str, bool] = {}
         self._builders: Dict[str, Callable[[], Any]] = {}
         self._arch_names: Dict[str, str] = {}
@@ -94,6 +172,7 @@ class DependencyManager:
                 self.stats.hits += 1
                 img = self._images[image_id]
                 img.last_used = time.monotonic()
+                self._ledger.touch(image_id, img.last_used)
                 return img
             self.stats.misses += 1
             t0 = time.perf_counter()
@@ -115,32 +194,27 @@ class DependencyManager:
             return img
 
     def _admit(self, img: LiveDependencyImage) -> None:
-        if self.capacity_bytes is not None:
-            needed = img.image_bytes
-            while self.pool_bytes() + needed > self.capacity_bytes:
-                if not self._evict_lru():
-                    break
-        self._images[img.metadata.image_id] = img
-
-    def _evict_lru(self) -> bool:
-        candidates = [(im.last_used, iid) for iid, im in self._images.items()
-                      if iid not in self._pinned and im.refcount == 0]
-        if not candidates:
-            return False
-        _, victim = min(candidates)
-        self.evict(victim)
-        return True
+        image_id = img.metadata.image_id
+        evicted = self._ledger.admit(image_id, img.image_bytes, img.last_used,
+                                     pinned=image_id in self._pinned)
+        for victim in evicted:
+            self._spill(victim)
+        self._images[image_id] = img
 
     def evict(self, image_id: str) -> None:
         """RAM -> disk tier (or drop, if no disk dir; rebuildable via builder)."""
         with self._lock:
-            img = self._images.pop(image_id, None)
-            if img is None:
-                return
-            if self.disk_dir:
-                img.dump_to_disk(self.disk_dir)
-                self._on_disk[image_id] = True
-            self.stats.evictions += 1
+            self._ledger.evict(image_id)
+            self._spill(image_id)
+
+    def _spill(self, image_id: str) -> None:
+        img = self._images.pop(image_id, None)
+        if img is None:
+            return
+        if self.disk_dir:
+            img.dump_to_disk(self.disk_dir)
+            self._on_disk[image_id] = True
+        self.stats.evictions += 1
 
     # ------------------------------------------------------------------ migration
     def request_migration(
@@ -155,6 +229,8 @@ class DependencyManager:
         with self._lock:
             img.refcount += 1
             img.last_used = time.monotonic()
+            self._ledger.acquire(image_id)
+            self._ledger.touch(image_id, img.last_used)
         client = MigrationClient(link or self.link)
         return client.migrate(img, policy)
 
@@ -163,6 +239,7 @@ class DependencyManager:
             if image_id in self._images:
                 self._images[image_id].refcount = max(
                     0, self._images[image_id].refcount - 1)
+                self._ledger.release(image_id)
 
     def executables_for(self, image_id: str) -> Dict[str, Any]:
         return self._ensure_live(image_id).executables
@@ -181,6 +258,7 @@ class DependencyManager:
         with self._lock:
             self._treedefs[image_id] = new_img.treedef
             self._images[image_id] = new_img
+            self._ledger.resize(image_id, new_img.image_bytes)
 
     # ------------------------------------------------------------------ accounting
     def pool_bytes(self) -> int:

@@ -37,12 +37,36 @@ class CostModel:
     image_bytes: int = 230 << 20      # one shared dependency image (paper: 260 MB total
     metadata_bytes: int = 3 << 20     #   = image + 10 x per-fn metadata, §4.5)
     snapshot_bytes: int = 230 << 20   # one prebaked snapshot per function (~2.3 GB /10)
+    image_revive_s: float = 0.4       # extra cold-start cost when the worker's pool
+                                      #   must revive/rebuild the image first
+                                      #   (disk-tier revive, §3.2; fleet sim only)
 
     @classmethod
     def paper_table2(cls) -> "CostModel":
         """The paper's measured rnn_serving-class numbers (Table 2 / §4.5)."""
         return cls(cold_warmswap_s=0.89, cold_prebaking_s=0.91, cold_baseline_s=2.2,
                    warm_s=0.004)
+
+
+def method_cold_latency_s(cost: CostModel, method: str) -> float:
+    """Cold-start latency for a method, pool hit assumed (shared with fleet.py)."""
+    return {
+        "warmswap": cost.cold_warmswap_s + cost.container_s,
+        "prebaking": cost.cold_prebaking_s + cost.container_s,
+        "baseline": cost.cold_baseline_s + cost.container_s,
+    }[method]
+
+
+def method_memory_bytes(cost: CostModel, method: str, n_functions: int,
+                        shared_images: int = 1) -> int:
+    """Single-worker resident-memory model: WarmSwap = shared images + per-fn
+    metadata; Prebaking = one snapshot per function; Baseline = nothing."""
+    return {
+        "warmswap": shared_images * cost.image_bytes
+                    + n_functions * cost.metadata_bytes,
+        "prebaking": n_functions * cost.snapshot_bytes,
+        "baseline": 0,
+    }[method]
 
 
 @dataclass
@@ -65,14 +89,11 @@ def simulate(
     traces: List[Trace],
     method: str,                       # 'warmswap' | 'prebaking' | 'baseline'
     cost: CostModel,
-    keep_alive: KeepAlivePolicy = KeepAlivePolicy(15.0),
+    keep_alive: Optional[KeepAlivePolicy] = None,
     shared_images: int = 1,            # distinct dependency images across the fleet
 ) -> SimResult:
-    cold_latency = {
-        "warmswap": cost.cold_warmswap_s + cost.container_s,
-        "prebaking": cost.cold_prebaking_s + cost.container_s,
-        "baseline": cost.cold_baseline_s + cost.container_s,
-    }[method]
+    keep_alive = keep_alive if keep_alive is not None else KeepAlivePolicy(15.0)
+    cold_latency = method_cold_latency_s(cost, method)
 
     n_cold = n_warm = 0
     total = 0.0
@@ -95,12 +116,7 @@ def simulate(
         per_fn_lat[tr.fn_index] = lat_sum
         per_fn_n[tr.fn_index] = len(tr.arrivals_min)
 
-    n_fns = len(traces)
-    memory = {
-        "warmswap": shared_images * cost.image_bytes + n_fns * cost.metadata_bytes,
-        "prebaking": n_fns * cost.snapshot_bytes,
-        "baseline": 0,
-    }[method]
+    memory = method_memory_bytes(cost, method, len(traces), shared_images)
     return SimResult(method=method, n_invocations=n_cold + n_warm, n_cold=n_cold,
                      n_warm=n_warm, total_latency_s=total, memory_bytes=memory,
                      per_fn_latency=per_fn_lat, per_fn_invocations=per_fn_n)

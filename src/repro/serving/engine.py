@@ -64,19 +64,20 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ArchConfig, params: Any, serve_cfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg: ArchConfig, params: Any,
+                 serve_cfg: Optional[ServeConfig] = None):
         self.cfg = cfg
         self.params = params
-        self.scfg = serve_cfg
-        B = serve_cfg.max_slots
-        self.state = init_decode_state(cfg, B, serve_cfg.max_seq_len, jnp.float32)
+        self.scfg = serve_cfg if serve_cfg is not None else ServeConfig()
+        B = self.scfg.max_slots
+        self.state = init_decode_state(cfg, B, self.scfg.max_seq_len, jnp.float32)
         self._serve_step = jax.jit(make_serve_step_with_logits(cfg))
         self._queue: Deque[Request] = collections.deque()
         self._slots: List[Optional[Request]] = [None] * B
         self._next_tok = np.zeros((B, 1), np.int32)
         self._rid = itertools.count()
         self.completed: Dict[int, Request] = {}
-        self._rng = np.random.default_rng(serve_cfg.seed)
+        self._rng = np.random.default_rng(self.scfg.seed)
         self.steps = 0
 
     # ------------------------------------------------------------------ intake
@@ -146,7 +147,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ bring-up
     @classmethod
     def from_pool(cls, manager, image_id: str, cfg: ArchConfig,
-                  serve_cfg: ServeConfig = ServeConfig(), policy=None):
+                  serve_cfg: Optional[ServeConfig] = None, policy=None):
         """WarmSwap replica bring-up: live-migrate the base image from the pool."""
         from repro.core.migration import RestorePolicy
         restored = manager.request_migration(image_id, policy or RestorePolicy.BULK)

@@ -1,19 +1,55 @@
-"""Fleet-level request scheduling with straggler mitigation.
+"""Fleet-level request scheduling: placement + straggler mitigation.
 
-Routes requests across serving replicas, tracking per-replica EWMA step latency.
-A replica whose in-flight request exceeds ``straggler_factor``x its EWMA is flagged;
-flagged work is re-dispatched to the fastest healthy replica (backup-request
-strategy), and repeatedly-flagged replicas are quarantined and replaced through the
-WarmSwap pool (fast re-warm — the recovery path fault_tolerance.py measures).
+Placement (``place_invocation``) is image-affinity routing: prefer a worker that
+already has a warm instance, then one whose Dependency-Manager pool holds the
+needed live image (migration is a local memcpy there), then least-loaded. The
+same function drives both the live :class:`FleetScheduler` and the discrete-event
+fleet simulator (``repro.core.fleet``), so simulated placement decisions match
+what the serving layer would do.
+
+Straggler mitigation routes requests across serving replicas, tracking
+per-replica EWMA step latency. A replica whose in-flight request exceeds
+``straggler_factor``x its EWMA is flagged; flagged work is re-dispatched to the
+fastest healthy replica (backup-request strategy), and repeatedly-flagged
+replicas are quarantined and replaced through the WarmSwap pool (fast re-warm —
+the recovery path fault_tolerance.py measures).
 """
 from __future__ import annotations
 
 import collections
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
+
+
+def place_invocation(
+    workers: Sequence,
+    *,
+    load: Callable,
+    has_warm: Optional[Callable] = None,
+    holds_image: Optional[Callable] = None,
+):
+    """Image-affinity placement over ``workers`` (any hashable ids).
+
+    Priority: (1) a worker with a warm idle instance of the function,
+    (2) a worker whose pool already holds the live dependency image,
+    (3) the least-loaded worker. Ties break on position in ``workers``, so
+    placement is deterministic and worker ids never need to be orderable."""
+    if not workers:
+        return None
+    rank = {w: i for i, w in enumerate(workers)}
+    key = lambda w: (load(w), rank[w])  # noqa: E731
+    if has_warm is not None:
+        warm = [w for w in workers if has_warm(w)]
+        if warm:
+            return min(warm, key=key)
+    if holds_image is not None:
+        holding = [w for w in workers if holds_image(w)]
+        if holding:
+            return min(holding, key=key)
+    return min(workers, key=key)
 
 
 @dataclass
@@ -38,8 +74,10 @@ class SchedulerConfig:
 class FleetScheduler:
     """Dispatch + straggler handling over a set of named replicas."""
 
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+        # fresh config per scheduler: a shared default instance would leak
+        # threshold mutations across schedulers
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.health: Dict[str, ReplicaHealth] = {}
         self.dispatch_log: List[tuple] = []
 
@@ -58,6 +96,16 @@ class FleetScheduler:
         if not h:
             return None
         return min(h, key=lambda n: (self.health[n].ewma_s, n))
+
+    def pick_affine(self, image_id: str,
+                    residency: Dict[str, Iterable[str]]) -> Optional[str]:
+        """Placement that prefers healthy replicas whose pool holds ``image_id``
+        (``residency``: replica -> live image ids), then lowest EWMA."""
+        return place_invocation(
+            self.healthy(),
+            load=lambda n: self.health[n].ewma_s,
+            holds_image=lambda n: image_id in residency.get(n, ()),
+        )
 
     def observe(self, name: str, dt: float) -> bool:
         """Record a completed unit of work; returns True if it was a straggler."""

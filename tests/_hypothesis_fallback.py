@@ -1,0 +1,138 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+Several test modules use hypothesis property tests (`@given` over strategies).
+The CI/tier-1 environment does not always ship hypothesis, and installing new
+packages is not an option there.  Rather than skipping those modules wholesale
+(they also contain plain tests), `conftest.py` installs this shim into
+``sys.modules['hypothesis']`` **only when the real package is absent**.
+
+The shim re-runs each property test body over `max_examples` pseudo-random
+examples drawn from a fixed-seed generator — a seeded fuzz pass rather than
+true property-based testing (no shrinking, no example database).  Supported
+surface is exactly what the test-suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers / st.floats / st.sampled_from / st.composite / st.lists /
+    st.booleans / st.just
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_FALLBACK = True          # conftest checks this to report the substitution
+_SEED = 0x5EED
+
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _max_tries=1000):
+        def sample(rng):
+            for _ in range(_max_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return Strategy(sample)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, int(max_value) + 1)))
+
+
+def floats(min_value, max_value, **_):
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def lists(element, min_size=0, max_size=10, **_):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [element.example(rng) for _ in range(n)]
+    return Strategy(sample)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def sample(rng):
+            def draw(strategy):
+                return strategy.example(rng)
+            return fn(draw, *args, **kwargs)
+        return Strategy(sample)
+    return builder
+
+
+class settings:
+    """Decorator-compatible subset: only max_examples is honoured."""
+
+    def __init__(self, max_examples=20, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # Positional strategies bind to the RIGHTMOST parameters (as in real
+        # hypothesis); anything left of them (e.g. fixtures) stays visible to
+        # pytest and reaches the wrapper as keyword arguments.
+        params = list(inspect.signature(fn).parameters.values())
+        strategy_names = [p.name for p in
+                          params[len(params) - len(arg_strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", None))
+            n = cfg.max_examples if cfg else 20
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                drawn = {name: s.example(rng)
+                         for name, s in zip(strategy_names, arg_strategies)}
+                drawn.update({k: s.example(rng)
+                              for k, s in kw_strategies.items()})
+                fn(*args, **kwargs, **drawn)
+
+        keep = params[: len(params) - len(arg_strategies)]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        try:
+            del wrapper.__wrapped__          # stop signature() following fn
+        except AttributeError:
+            pass
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name, _obj in (("integers", integers), ("floats", floats),
+                    ("booleans", booleans), ("just", just),
+                    ("sampled_from", sampled_from), ("lists", lists),
+                    ("composite", composite)):
+    setattr(strategies, _name, _obj)

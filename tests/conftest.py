@@ -1,4 +1,6 @@
+import importlib.util
 import os
+import sys
 
 # Smoke tests and benches must see the single real device; ONLY the dry-run launcher
 # forces 512 host devices (and it does so in its own process).
@@ -7,3 +9,17 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Property tests use hypothesis when available; otherwise fall back to the
+# deterministic seeded-fuzz shim so those modules still collect and run
+# (see tests/_hypothesis_fallback.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies

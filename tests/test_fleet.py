@@ -1,0 +1,219 @@
+"""Multi-worker fleet simulator: concurrency, placement, capacity accounting,
+pre-warm policies, and the degenerate-case equivalence with simulate()."""
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetConfig, simulate_fleet
+from repro.core.keepalive import (HistogramKeepAlive, KeepAlivePolicy,
+                                  PrewarmPolicy, SpesPrewarm)
+from repro.core.pool import CapacityLedger
+from repro.core.simulator import (CostModel, memory_saving_fraction,
+                                  quartile_latencies, simulate)
+from repro.core.traces import (Trace, assign_images, generate_fleet_traces,
+                               generate_traces, sharing_degrees, zipf_weights)
+from repro.serving.scheduler import FleetScheduler, place_invocation
+
+CM = CostModel.paper_table2()
+
+
+def _trace(fn, arrivals, image=0):
+    arr = np.asarray(arrivals, np.float64)
+    rate = len(arr) / max(float(arr[-1]) if len(arr) else 1.0, 1.0)
+    return Trace(fn, rate, arr, image_id=image)
+
+
+# ---------------------------------------------------------------------------------
+# Degenerate case: 1 worker / 1 instance per fn / unlimited capacity == simulate()
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["warmswap", "prebaking", "baseline"])
+def test_degenerate_matches_simulate(method):
+    traces = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
+    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    rf = simulate_fleet(traces, method, CM, deg)
+    rs = simulate(traces, method, CM, KeepAlivePolicy(15.0))
+    assert (rf.n_cold, rf.n_warm) == (rs.n_cold, rs.n_warm)
+    assert rf.total_latency_s == pytest.approx(rs.total_latency_s, abs=1e-6)
+    assert rf.memory_bytes == rs.memory_bytes
+    for fn in rs.per_fn_latency:
+        assert rf.per_fn_latency[fn] == pytest.approx(rs.per_fn_latency[fn])
+
+
+def test_degenerate_preserves_88pct_headline():
+    traces = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
+    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    rw = simulate_fleet(traces, "warmswap", CM, deg)
+    rp = simulate_fleet(traces, "prebaking", CM, deg)
+    assert 0.85 < memory_saving_fraction(rw, rp) < 0.92
+    ql = quartile_latencies(traces, rw)       # FleetResult is duck-compatible
+    assert set(ql) == {"lowest", "25-50%", "50-75%", "highest"}
+
+
+# ---------------------------------------------------------------------------------
+# Concurrency
+# ---------------------------------------------------------------------------------
+
+def test_overlapping_arrivals_spawn_concurrent_instances():
+    # two arrivals 0.06 s apart; a cold start takes ~1.39 s, so the second
+    # arrival finds the only instance busy -> a second (cold) instance spawns
+    traces = [_trace(0, [10.0, 10.001])]
+    r = simulate_fleet(traces, "warmswap", CM, FleetConfig(n_workers=1))
+    assert r.n_cold == 2 and r.n_warm == 0
+    assert r.max_concurrent_instances == 2
+
+
+def test_instance_cap_serializes_like_paper_model():
+    traces = [_trace(0, [10.0, 10.001])]
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    r = simulate_fleet(traces, "warmswap", CM, cfg)
+    assert r.n_cold == 1 and r.n_warm == 1
+    assert r.max_concurrent_instances == 1
+
+
+def test_warm_reuse_after_completion():
+    traces = [_trace(0, [10.0, 12.0])]        # second arrival: idle, in window
+    r = simulate_fleet(traces, "warmswap", CM, FleetConfig(n_workers=1))
+    assert r.n_cold == 1 and r.n_warm == 1
+
+
+# ---------------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------------
+
+def test_affinity_beats_round_robin_on_skewed_trace():
+    traces = generate_fleet_traces(24, horizon_min=2 * 24 * 60, seed=3,
+                                   n_images=4, rate_model="zipf",
+                                   total_rate_per_min=4.0)
+    results = {}
+    for placement in ("affinity", "round_robin"):
+        cfg = FleetConfig(n_workers=4, placement=placement,
+                          worker_capacity_bytes=2 * CM.image_bytes)
+        results[placement] = simulate_fleet(traces, "warmswap", CM, cfg)
+    aff, rr = results["affinity"], results["round_robin"]
+    assert aff.n_cold < rr.n_cold
+    assert aff.pool_misses < rr.pool_misses
+    assert aff.avg_latency_s < rr.avg_latency_s
+
+
+def test_place_invocation_priority():
+    load = {0: 5, 1: 0, 2: 3}.__getitem__
+    # warm beats pool-residency beats load
+    assert place_invocation([0, 1, 2], load=load,
+                            has_warm=lambda w: w == 0,
+                            holds_image=lambda w: w == 2) == 0
+    assert place_invocation([0, 1, 2], load=load,
+                            has_warm=lambda w: False,
+                            holds_image=lambda w: w == 2) == 2
+    assert place_invocation([0, 1, 2], load=load,
+                            has_warm=lambda w: False,
+                            holds_image=lambda w: False) == 1
+
+
+def test_fleet_scheduler_pick_affine_prefers_residency():
+    s = FleetScheduler()
+    for name in ("a", "b"):
+        s.register_replica(name)
+    s.observe("a", 0.001)                      # 'a' is fast
+    s.observe("b", 0.1)                        # 'b' is slow
+    assert s.pick_affine("img", {"b": {"img"}}) == "b"   # residency wins
+    assert s.pick_affine("img", {}) == "a"               # else fastest EWMA
+
+
+# ---------------------------------------------------------------------------------
+# Memory accounting
+# ---------------------------------------------------------------------------------
+
+def test_warmswap_memory_is_O_images_per_worker():
+    # 12 functions all sharing ONE image on one worker: pool holds 1 image,
+    # metadata scales with functions — never 12 images
+    n_fns = 12
+    traces = [_trace(i, [float(10 + i)], image=0) for i in range(n_fns)]
+    r = simulate_fleet(traces, "warmswap", CM, FleetConfig(n_workers=1))
+    assert r.memory_bytes == CM.image_bytes + n_fns * CM.metadata_bytes
+    assert r.per_worker[0]["resident"] == ["img:0"]
+    rp = simulate_fleet(traces, "prebaking", CM, FleetConfig(n_workers=1))
+    assert rp.memory_bytes == n_fns * CM.snapshot_bytes
+
+
+def test_capacity_pressure_causes_evictions_and_revives():
+    # 3 images on 1 worker with room for only 1 -> thrashing: evictions and
+    # revive-penalty cold starts must show up
+    traces = [_trace(i, [10.0 * (i + 1), 200.0 + 10.0 * i], image=i)
+              for i in range(3)]
+    cfg = FleetConfig(n_workers=1, worker_capacity_bytes=CM.image_bytes)
+    r = simulate_fleet(traces, "warmswap", CM, cfg)
+    assert r.evictions > 0
+    assert r.pool_misses > 0
+    assert r.memory_bytes <= CM.image_bytes + 3 * CM.metadata_bytes
+
+
+def test_capacity_ledger_lru_and_pins():
+    led = CapacityLedger(capacity_bytes=100)
+    led.admit("a", 60, now=1.0)
+    led.admit("b", 40, now=2.0)
+    evicted = led.admit("c", 50, now=3.0)      # must evict LRU 'a'
+    assert evicted == ["a"] and led.holds("b") and led.holds("c")
+    led2 = CapacityLedger(capacity_bytes=100)
+    led2.admit("pinned", 60, now=1.0, pinned=True)
+    led2.admit("ref", 40, now=2.0)
+    led2.acquire("ref")
+    assert led2.admit("x", 50, now=3.0) == []  # nothing evictable: admit anyway
+    assert led2.used_bytes() == 150
+
+
+# ---------------------------------------------------------------------------------
+# Pre-warm policies
+# ---------------------------------------------------------------------------------
+
+def _periodic_traces(n_fns=6, period=10.0, horizon=2000.0):
+    return [_trace(fn, np.arange(5.0 + fn, horizon, period)) for fn in range(n_fns)]
+
+
+def test_histogram_keepalive_cuts_cold_starts_on_periodic_load():
+    # period 20 min > fixed 15-min keep-alive: fixed policy cold-starts every
+    # time, the histogram policy learns the inter-arrival time and covers it
+    traces = _periodic_traces(period=20.0)
+    base = simulate_fleet(traces, "warmswap", CM,
+                          FleetConfig(n_workers=2, prewarm="none"))
+    hist = simulate_fleet(traces, "warmswap", CM,
+                          FleetConfig(n_workers=2, prewarm="histogram"))
+    assert hist.n_cold < base.n_cold
+
+
+def test_spes_prewarm_cuts_residency_and_hits():
+    traces = _periodic_traces(period=20.0)
+    base = simulate_fleet(traces, "warmswap", CM,
+                          FleetConfig(n_workers=2, prewarm="none"))
+    spes = simulate_fleet(traces, "warmswap", CM,
+                          FleetConfig(n_workers=2, prewarm="spes"))
+    assert spes.prewarm_spawns > 0 and spes.prewarm_hits > 0
+    assert spes.instance_resident_min < base.instance_resident_min
+    assert spes.n_cold < base.n_cold           # predictions land on periodic load
+
+
+def test_policy_state_isolation():
+    p1, p2 = HistogramKeepAlive(), HistogramKeepAlive()
+    p1.on_arrival(0, 1.0)
+    p1.on_arrival(0, 2.0)
+    assert p2._iats.get(0) is None             # no shared mutable state
+
+
+# ---------------------------------------------------------------------------------
+# Fleet traces
+# ---------------------------------------------------------------------------------
+
+def test_zipf_weights_and_image_assignment():
+    w = zipf_weights(10, 1.2)
+    assert w.sum() == pytest.approx(1.0) and (np.diff(w) < 0).all()
+    imgs = assign_images(40, 4, skew=1.2, seed=0)
+    assert set(imgs) == {0, 1, 2, 3}           # coverage guarantee
+    deg = sharing_degrees(generate_fleet_traces(40, 100.0, seed=0, n_images=4))
+    assert sum(deg.values()) == 40
+
+
+def test_fleet_traces_deterministic():
+    a = generate_fleet_traces(8, 500.0, seed=9, n_images=3)
+    b = generate_fleet_traces(8, 500.0, seed=9, n_images=3)
+    for ta, tb in zip(a, b):
+        assert ta.image_id == tb.image_id
+        assert np.array_equal(ta.arrivals_min, tb.arrivals_min)
