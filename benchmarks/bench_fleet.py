@@ -2,12 +2,18 @@
 
 Extends bench_sharing (single worker, Fig. 7) into the design space the paper's
 fleet-level claims live in: per-method (WarmSwap / Prebaking / Baseline)
-latency quartiles, peak resident memory, pool-miss/eviction behaviour, and the
+latency quartiles AND per-request tail percentiles (P50/P95/P99 per
+invocation-rate quartile, from the event engine's latency samples), peak
+resident memory, pool-miss/eviction/queueing behaviour, and the
 pre-warm-policy comparison — all under identical image-affinity placement.
 
 Also re-derives Fig. 7 as the degenerate point (1 worker, unlimited capacity,
 one instance per function) and checks it against ``simulator.simulate()``,
-including the ~88 % memory-saving headline at sharing degree 10.
+including the ~88 % memory-saving headline at sharing degree 10, and runs a
+capped-concurrency cell where queue delay is visible (P99 > mean).
+
+Every cell's latency samples are validated: NaN or negative latencies fail the
+run (the CI smoke job relies on this).
 
     PYTHONPATH=src python -m benchmarks.run --only fleet [--smoke]
 """
@@ -20,24 +26,45 @@ from benchmarks.common import emit, save_json, smoke_mode
 METHODS = ("warmswap", "prebaking", "baseline")
 
 
+def _validated_samples(r, label: str):
+    """NaN / negative per-request latencies are impossible under a correct
+    queueing model — fail loudly rather than report them."""
+    import numpy as np
+
+    s = np.asarray(r.latency_samples_s)
+    if s.size and (not np.isfinite(s).all() or (s < 0).any()):
+        raise RuntimeError(f"fleet/{label}: NaN or negative latency samples")
+    if r.queue_delay_s < 0 or not np.isfinite(r.queue_delay_s):
+        raise RuntimeError(f"fleet/{label}: invalid queue delay "
+                           f"{r.queue_delay_s!r}")
+    return s
+
+
 def _cell(traces, cm, fleet, label: str) -> Dict:
     from repro.core.fleet import simulate_fleet
-    from repro.core.simulator import quartile_latencies
+    from repro.core.simulator import quartile_latencies, quartile_percentiles
 
     out: Dict = {}
     for method in METHODS:
         r = simulate_fleet(traces, method, cm, fleet)
+        _validated_samples(r, f"{label}/{method}")
+        pct = r.latency_percentiles()
         out[method] = {
             "avg_latency_s": r.avg_latency_s,
+            "latency_percentiles_s": pct,
             "quartile_latency_s": quartile_latencies(traces, r),
+            "quartile_percentiles_s": quartile_percentiles(traces, r),
             "peak_memory_mb": r.memory_bytes / 1e6,
             "cold": r.n_cold, "warm": r.n_warm,
+            "queued": r.n_queued, "queue_delay_s": r.queue_delay_s,
             "pool_misses": r.pool_misses, "evictions": r.evictions,
             "max_concurrent_instances": r.max_concurrent_instances,
             "instance_resident_min": r.instance_resident_min,
+            "prewarm_dropped": r.prewarm_dropped,
         }
         emit(f"fleet/{label}/{method}", r.avg_latency_s * 1e6,
-             f"mem={r.memory_bytes / 1e6:.0f}MB cold={r.n_cold} "
+             f"p99={pct['p99'] * 1e3:.1f}ms mem={r.memory_bytes / 1e6:.0f}MB "
+             f"cold={r.n_cold} queued={r.n_queued} "
              f"miss={r.pool_misses} evict={r.evictions}")
     return out
 
@@ -115,8 +142,29 @@ def run() -> Dict:
         out["sweep"][f"skew={s}"] = _cell(
             traces, cm, FleetConfig(n_workers=4, **base_fleet), f"skew={s}")
 
-    # ------------------------------------------------------- placement + pre-warm
+    # ------------------------------------------------------------ queueing cell
+    # Capped concurrency under the same workload: queue delay becomes visible
+    # and the tail separates from the mean (the arrival-ordered loop reported
+    # impossible flat latencies here).
     traces = generate_fleet_traces(**base)
+    out["queueing"] = {}
+    for cap in (None, 2, 1):
+        r = simulate_fleet(traces, "warmswap", cm,
+                           FleetConfig(n_workers=2, max_instances_per_fn=cap,
+                                       **base_fleet))
+        s = _validated_samples(r, f"cap={cap}/warmswap")
+        pct = r.latency_percentiles()
+        out["queueing"][f"cap={cap}"] = {
+            "avg_latency_s": r.avg_latency_s,
+            "latency_percentiles_s": pct,
+            "queued": r.n_queued, "queue_delay_s": r.queue_delay_s,
+        }
+        emit(f"fleet/cap={cap}/warmswap", r.avg_latency_s * 1e6,
+             f"p99={pct['p99'] * 1e3:.1f}ms queued={r.n_queued} "
+             f"queue_delay={r.queue_delay_s:.2f}s")
+        assert s.size == 0 or pct["p99"] >= pct["p50"], "percentiles inverted"
+
+    # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
     for placement in ("affinity", "least_loaded", "round_robin"):
         cfg = FleetConfig(n_workers=4, placement=placement, **base_fleet)
@@ -126,13 +174,17 @@ def run() -> Dict:
     for pw in ("none", "histogram", "spes"):
         r = simulate_fleet(traces, "warmswap", cm,
                            FleetConfig(n_workers=4, prewarm=pw, **base_fleet))
+        _validated_samples(r, f"prewarm={pw}/warmswap")
         out["prewarm"][pw] = {
             "avg_latency_s": r.avg_latency_s, "cold": r.n_cold,
+            "latency_percentiles_s": r.latency_percentiles(),
             "prewarm_spawns": r.prewarm_spawns, "prewarm_hits": r.prewarm_hits,
+            "prewarm_dropped": r.prewarm_dropped,
             "instance_resident_min": r.instance_resident_min,
         }
         emit(f"fleet/prewarm={pw}/warmswap", r.avg_latency_s * 1e6,
-             f"cold={r.n_cold} resident_min={r.instance_resident_min:.0f}")
+             f"cold={r.n_cold} resident_min={r.instance_resident_min:.0f} "
+             f"dropped={r.prewarm_dropped}")
 
     save_json("bench_fleet", out)
     return out

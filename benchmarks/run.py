@@ -10,7 +10,9 @@ results/.  Mapping to the paper:
     bench_metadata   ->  Table 3 (metadata vs image size)
     bench_sharing    ->  Fig. 7 + 88% memory headline (Azure-trace simulation)
     bench_fleet      ->  multi-worker fleet sweep (workers x capacity x skew x
-                         sharing), placement + pre-warm policy comparison
+                         sharing), placement + pre-warm policy comparison,
+                         queue-accurate P50/P95/P99 per rate quartile
+                         (NaN/negative latencies fail the run)
     bench_kernels    ->  kernel-path microbenches + VMEM accounting
     bench_roofline   ->  assignment §Roofline table (from dry-run artifacts)
 

@@ -9,11 +9,14 @@ Public API:
   * coldstart   — ColdStartOrchestrator with per-phase timers (Figs. 3/6)
   * keepalive   — E_cs(λ) arrival math (§2.2) + pluggable pre-warm policies
   * traces      — Azure-statistics / Zipf fleet trace generation (§4.5)
-  * simulator   — single-worker simulation: WarmSwap vs Prebaking vs Baseline (Fig. 7)
-  * fleet       — multi-worker fleet simulation: concurrency, placement, capacity
+  * simulator   — single-worker, queue-accurate simulation (Fig. 7)
+  * events      — typed discrete-event core (heap + tie-break contract)
+  * fleet       — multi-worker discrete-event fleet simulation: concurrency,
+                  queueing, placement, capacity, latency percentiles
   * workloads   — FunctionBench-analogue suite (Table 1)
 """
 from repro.core.coldstart import ColdStartConfig, ColdStartOrchestrator, PhaseTimes
+from repro.core.events import Event, EventKind, EventQueue
 from repro.core.fleet import FleetConfig, FleetResult, simulate_fleet
 from repro.core.image import ImageMetadata, LiveDependencyImage, build_image
 from repro.core.keepalive import (HistogramKeepAlive, KeepAlivePolicy,
@@ -28,6 +31,7 @@ from repro.core.traces import generate_fleet_traces, generate_traces
 
 __all__ = [
     "ColdStartConfig", "ColdStartOrchestrator", "PhaseTimes",
+    "Event", "EventKind", "EventQueue",
     "FleetConfig", "FleetResult", "simulate_fleet",
     "ImageMetadata", "LiveDependencyImage", "build_image",
     "KeepAlivePolicy", "expected_cold_starts",

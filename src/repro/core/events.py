@@ -1,0 +1,74 @@
+"""Typed discrete-event core for the fleet simulator (``core/fleet.py``).
+
+The fleet engine is a single time-ordered queue of four event kinds plus the
+(pre-sorted, vectorized) merged arrival stream.  Arrivals never enter the
+heap — ``fleet.py`` merges the sorted arrival arrays against the heap head —
+so per-event work stays O(log n) no matter how many invocations a trace has.
+
+Tie-breaking at equal timestamps is load-bearing and encoded in the
+``EventKind`` integer values:
+
+  1. ``INSTANCE_FREE``    — a completing request frees its instance *before*
+     anything else at that instant, so an arrival (or queued request) at
+     exactly the completion time sees an idle instance (warm, no wait);
+  2. ``PREWARM_SPAWN``    — a predictive pre-warm lands before the arrival it
+     anticipates;
+  3. (arrivals)           — merged in here from the sorted trace arrays;
+  4. ``KEEPALIVE_EXPIRY`` — an arrival at exactly the expiry instant is still
+     warm (``simulate()``'s ``t <= expiry`` contract).
+
+Within one (time, kind) bucket, insertion order wins (FIFO).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Any, Optional, Tuple
+
+
+class EventKind(IntEnum):
+    """Heap tie-break order at equal timestamps (see module docstring)."""
+    INSTANCE_FREE = 0
+    PREWARM_SPAWN = 1
+    ARRIVAL = 2            # never heaped; used as the merge-comparison rank
+    KEEPALIVE_EXPIRY = 3
+
+
+@dataclass(frozen=True)
+class Event:
+    time: float            # minutes
+    kind: EventKind
+    payload: Any = None
+
+
+class EventQueue:
+    """Min-heap of :class:`Event`, ordered by (time, kind, insertion seq).
+
+    Payloads are never compared: the insertion sequence number is a unique
+    tie-break, so arbitrary (unorderable) payload objects are fine.
+    """
+
+    def __init__(self) -> None:
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, time: float, kind: EventKind, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (time, int(kind), next(self._seq), payload))
+
+    def pop(self) -> Event:
+        time, kind, _, payload = heapq.heappop(self._heap)
+        return Event(time, EventKind(kind), payload)
+
+    def peek_key(self) -> Optional[Tuple[float, int]]:
+        """(time, kind) of the earliest event, or None when empty."""
+        if not self._heap:
+            return None
+        return (self._heap[0][0], self._heap[0][1])
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

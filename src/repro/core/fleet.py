@@ -7,6 +7,10 @@ live in:
 
   * **concurrency** — an arrival that finds every instance of its function busy
     spawns a *new* cold/warm instance instead of being serialized;
+  * **queueing** — with ``max_instances_per_fn`` set, an at-cap arrival joins a
+    per-worker FIFO queue and is dispatched by the instance-free event of the
+    next completing instance; its latency = queue delay + warm cost, so tail
+    latency under contention is queue-accurate (P99 > mean once requests wait);
   * **N worker nodes** — each with its own Dependency-Manager pool, modeled by
     the same :class:`~repro.core.pool.CapacityLedger` the real manager uses
     (capacity + LRU + refcounts), so images get evicted and revived under
@@ -14,10 +18,24 @@ live in:
   * **placement** — invocations are routed by
     :func:`repro.serving.scheduler.place_invocation`: warm-instance affinity,
     then image-affinity (the pool already holds the live image), then
-    least-loaded; round-robin and plain least-loaded are available as controls;
+    least-loaded *including queue depth*; round-robin and plain least-loaded
+    are available as controls;
   * **pluggable pre-warm policies** (:mod:`repro.core.keepalive`) — fixed
     keep-alive (paper §4.5), histogram-adaptive keep-alive, and SPES-style
-    predictive pre-warming, comparable under identical placement.
+    predictive pre-warming, comparable under identical placement. Policies see
+    completion events (``on_completion``), not just arrivals.
+
+The engine is a discrete-event simulation (``core/events.py``): one heap of
+typed events (instance-free, pre-warm spawn, keep-alive expiry) merged against
+the vectorized, pre-sorted arrival stream. Invariants the engine maintains:
+
+  * ``busy_until`` is monotone per instance — a request never starts before
+    the previous one on the same instance completed;
+  * residency accounting clamps instance lifetimes to the trace horizon
+    (the last arrival time), so ``instance_resident_min`` never counts
+    keep-alive time the trace window cannot observe;
+  * pre-warm spawns scheduled past the horizon are drained and accounted as
+    ``prewarm_dropped`` rather than silently lost.
 
 Degenerate case: ``n_workers=1``, unlimited capacity, ``max_instances_per_fn=1``
 reproduces ``simulate()`` — including the ~88 % memory-saving headline at
@@ -26,16 +44,17 @@ sharing degree 10 (verified in tests/test_fleet.py).
 from __future__ import annotations
 
 import copy
-import heapq
-import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.events import EventKind, EventQueue
 from repro.core.keepalive import PREWARM_POLICIES, PrewarmPolicy
 from repro.core.pool import CapacityLedger
-from repro.core.simulator import CostModel, method_cold_latency_s
+from repro.core.simulator import (CostModel, latency_percentiles,
+                                  method_cold_latency_s)
 from repro.core.traces import Trace
 
 
@@ -43,8 +62,13 @@ from repro.core.traces import Trace
 class FleetConfig:
     n_workers: int = 1
     placement: str = "affinity"            # 'affinity' | 'least_loaded' | 'round_robin'
-    max_instances_per_fn: Optional[int] = None   # None = unbounded concurrency;
-                                                 # 1 = simulate()'s serialized model
+    max_instances_per_fn: Optional[int] = None   # None = unbounded concurrency.
+                                                 # The cap (and its FIFO queue) is
+                                                 # per WORKER: with n_workers=1,
+                                                 # cap=1 is simulate()'s serialized
+                                                 # model; with several workers,
+                                                 # placement may spawn on another
+                                                 # worker instead of queueing
     worker_capacity_bytes: Optional[int] = None  # per-worker pool capacity
     prewarm: Union[str, PrewarmPolicy] = "none"  # policy name or ready instance
     keep_alive_min: float = 15.0                 # window for the 'none' policy
@@ -53,10 +77,12 @@ class FleetConfig:
 @dataclass
 class _Instance:
     fn: int
-    busy_until: float        # minutes
+    busy_until: float        # minutes; monotone — only ever advanced
     expires: float           # minutes (keep-alive expiry)
     created: float = 0.0
     prewarmed: bool = False
+    gen: int = 0             # expiry generation: stale expiry events carry an
+                             #   older gen and are dropped on arrival
 
 
 class _Worker:
@@ -64,28 +90,26 @@ class _Worker:
         self.idx = idx
         self.ledger = CapacityLedger(capacity_bytes)
         self.instances: Dict[int, List[_Instance]] = {}
+        self.queues: Dict[int, Deque[Tuple[float, int]]] = {}  # fn -> (t, req idx)
         self.metadata_fns: set = set()
         self.n_served = 0
         self.instance_min = 0.0      # total warm-instance residency (minutes)
 
-    def alive(self, fn: int, t: float) -> List[_Instance]:
-        insts, kept = self.instances.get(fn, ()), []
-        for i in insts:
-            if i.expires >= t:
-                kept.append(i)
-            else:
-                self.instance_min += i.expires - i.created
-        self.instances[fn] = kept
-        return kept
+    def alive(self, fn: int) -> List[_Instance]:
+        """Instances of ``fn``; expiry events (not reads) prune this list."""
+        return self.instances.get(fn, [])
 
     def idle_instance(self, fn: int, t: float) -> Optional[_Instance]:
-        avail = [i for i in self.alive(fn, t) if i.busy_until <= t]
+        avail = [i for i in self.alive(fn) if i.busy_until <= t]
         return min(avail, key=lambda i: i.busy_until) if avail else None
 
     def load(self, t: float) -> int:
         """In-flight requests on this worker (busy, unexpired instances)."""
-        return sum(sum(1 for i in self.alive(fn, t) if i.busy_until > t)
-                   for fn in list(self.instances))
+        return sum(sum(1 for i in insts if i.busy_until > t)
+                   for insts in self.instances.values())
+
+    def queue_depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
 
 
 @dataclass
@@ -103,17 +127,31 @@ class FleetResult:
     evictions: int = 0
     prewarm_spawns: int = 0
     prewarm_hits: int = 0
+    prewarm_dropped: int = 0             # spawn events past the trace horizon
     max_concurrent_instances: int = 1    # peak instances of any SINGLE function
                                          #   (>1 means arrivals overlapped)
     placement_warm_hits: int = 0         # routed to a worker with an idle warm inst
     placement_pool_hits: int = 0         # routed by image residency
-    instance_resident_min: float = 0.0   # warm instance-minutes across the fleet
-                                         #   (the residency SPES-style policies cut)
+    instance_resident_min: float = 0.0   # warm instance-minutes across the fleet,
+                                         #   clamped to the trace horizon
+    n_queued: int = 0                    # requests that waited for an instance
+    queue_delay_s: float = 0.0           # total time requests spent queued
+    horizon_min: float = 0.0             # last arrival time (residency clamp)
+    latency_samples_s: np.ndarray = field(
+        default_factory=lambda: np.empty(0))   # per request, merged-arrival order
+    queue_wait_s: np.ndarray = field(
+        default_factory=lambda: np.empty(0))   # per request, merged-arrival order
+    sample_fn: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))  # fn index per sample
     per_worker: List[Dict] = field(default_factory=list)
 
     @property
     def avg_latency_s(self) -> float:
         return self.total_latency_s / max(self.n_invocations, 1)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """P50/P95/P99 (+ mean/max) over the per-request latency samples."""
+        return latency_percentiles(self.latency_samples_s)
 
 
 def _make_policy(cfg: FleetConfig) -> PrewarmPolicy:
@@ -145,6 +183,7 @@ def simulate_fleet(
     from repro.serving.scheduler import place_invocation
     policy = _make_policy(fleet)
     cold_base = method_cold_latency_s(cost, method)
+    cap = fleet.max_instances_per_fn
     workers = [_Worker(i, fleet.worker_capacity_bytes)
                for i in range(fleet.n_workers)]
     fn_image = {t.fn_index: t.image_id for t in traces}
@@ -189,26 +228,36 @@ def simulate_fleet(
             home.ledger.admit(f"snap:{fn}", cost.snapshot_bytes, now=0.0)
     note_peak()
 
-    # ---------------------------------------------------------------- event feed
+    # ------------------------------------------------------------- arrival stream
+    # Vectorized merge of the per-function arrival arrays; arrivals never enter
+    # the event heap — the main loop merges this stream against the heap head.
     all_t = np.concatenate([t.arrivals_min for t in traces]) if traces else \
         np.empty((0,))
     all_fn = np.concatenate([np.full(len(t.arrivals_min), t.fn_index, np.int64)
                              for t in traces]) if traces else np.empty((0,), np.int64)
     order = np.argsort(all_t, kind="stable")
     all_t, all_fn = all_t[order], all_fn[order]
-    prewarm_heap: list = []            # (spawn_at, seq, fn, expire_at)
-    seq = itertools.count()
+    n_req = len(all_t)
+    horizon = float(all_t[-1]) if n_req else 0.0
+    res.horizon_min = horizon
+    samples = np.full(n_req, np.nan)
+    waits = np.full(n_req, np.nan)
+    events = EventQueue()
+    arrival_seq = 0                    # round-robin rotates per ARRIVAL; queued
+                                       #   requests must not stall the rotation
 
     def pick_worker(fn: int, t: float) -> _Worker:
         key = resident_key(fn)
         if fleet.placement == "round_robin":
-            w = workers[res.n_invocations % len(workers)]
+            w = workers[arrival_seq % len(workers)]
         elif fleet.placement == "least_loaded":
-            w = place_invocation(workers, load=lambda w: w.load(t))
+            w = place_invocation(workers, load=lambda w: w.load(t),
+                                 queue_depth=_Worker.queue_depth)
         else:                          # affinity
             w = place_invocation(
                 workers,
                 load=lambda w: w.load(t),
+                queue_depth=_Worker.queue_depth,
                 has_warm=lambda w: w.idle_instance(fn, t) is not None,
                 holds_image=lambda w: w.ledger.holds(key),
             )
@@ -240,12 +289,49 @@ def simulate_fleet(
         note_peak()
         return lat
 
+    def begin_service(w: _Worker, inst: _Instance, start: float, svc_s: float,
+                      req_t: float, idx: int) -> None:
+        """Run one request on ``inst`` starting at ``start`` (>= its previous
+        ``busy_until`` by construction, so busy_until only ever advances)."""
+        wait_s = (start - req_t) * 60.0
+        lat = wait_s + svc_s
+        inst.busy_until = start + svc_s / 60.0
+        inst.expires = inst.busy_until + policy.keep_alive_min(inst.fn)
+        inst.gen += 1
+        events.push(inst.busy_until, EventKind.INSTANCE_FREE, (w, inst))
+        events.push(inst.expires, EventKind.KEEPALIVE_EXPIRY,
+                    (w, inst, inst.gen))
+        w.n_served += 1
+        res.n_invocations += 1
+        res.total_latency_s += lat
+        if wait_s > 0:
+            res.n_queued += 1
+            res.queue_delay_s += wait_s
+        samples[idx] = lat
+        waits[idx] = wait_s
+        fn = inst.fn
+        res.per_fn_latency[fn] = res.per_fn_latency.get(fn, 0.0) + lat
+        res.per_fn_invocations[fn] = res.per_fn_invocations.get(fn, 0) + 1
+
+    def retire(w: _Worker, inst: _Instance) -> None:
+        """Keep-alive expired: remove the instance, account its residency
+        clamped to the trace horizon."""
+        insts = w.instances.get(inst.fn)
+        if insts is not None and inst in insts:
+            insts.remove(inst)
+        w.instance_min += max(0.0, min(inst.expires, horizon) - inst.created)
+
     def spawn_prewarm(t: float, fn: int, expire_at: float) -> None:
+        if t > horizon:
+            # scheduled past the last arrival: drained, accounted, not spawned
+            res.prewarm_dropped += 1
+            return
         for w in workers:
-            if w.alive(fn, t):
+            if w.alive(fn):
                 return                 # something is already warm; don't double-spawn
         key = resident_key(fn)
         w = place_invocation(workers, load=lambda w: w.load(t),
+                             queue_depth=_Worker.queue_depth,
                              holds_image=lambda w: w.ledger.holds(key))
         if method != "baseline":
             nbytes = cost.image_bytes if method == "warmswap" else cost.snapshot_bytes
@@ -253,64 +339,79 @@ def simulate_fleet(
             if method == "warmswap":
                 w.metadata_fns.add(fn)
             note_peak()
-        w.instances.setdefault(fn, []).append(
-            _Instance(fn, busy_until=t, expires=expire_at, created=t,
-                      prewarmed=True))
+        inst = _Instance(fn, busy_until=t, expires=expire_at, created=t,
+                         prewarmed=True)
+        w.instances.setdefault(fn, []).append(inst)
+        events.push(expire_at, EventKind.KEEPALIVE_EXPIRY, (w, inst, inst.gen))
         res.prewarm_spawns += 1
 
-    # ---------------------------------------------------------------- event loop
-    for t, fn in zip(all_t, all_fn):
-        t, fn = float(t), int(fn)
-        while prewarm_heap and prewarm_heap[0][0] <= t:
-            ts, _, pfn, pexp = heapq.heappop(prewarm_heap)
-            spawn_prewarm(ts, pfn, pexp)
-
+    def handle_arrival(t: float, fn: int, idx: int) -> None:
+        nonlocal arrival_seq
         policy.on_arrival(fn, t)
-        ka = policy.keep_alive_min(fn)
         w = pick_worker(fn, t)
+        arrival_seq += 1
         inst = w.idle_instance(fn, t)
-        alive = w.alive(fn, t)
-
+        alive = w.alive(fn)
         if inst is not None:
-            lat = cost.warm_s
             res.n_warm += 1
             if inst.prewarmed:
                 res.prewarm_hits += 1
                 inst.prewarmed = False
-        elif alive and (fleet.max_instances_per_fn is not None
-                        and len(alive) >= fleet.max_instances_per_fn):
-            # at the instance cap: serialize onto the soonest-free instance
-            # (max_instances_per_fn=1 is exactly simulate()'s warm path)
-            lat = cost.warm_s
-            res.n_warm += 1
-            inst = min(alive, key=lambda i: i.busy_until)
+            begin_service(w, inst, start=t, svc_s=cost.warm_s, req_t=t, idx=idx)
+        elif alive and cap is not None and len(alive) >= cap:
+            # at the instance cap: join this worker's FIFO queue; the next
+            # instance-free event dispatches it (latency = wait + warm cost)
+            w.queues.setdefault(fn, deque()).append((t, idx))
         else:
-            lat = cold_start(w, fn, t)
+            svc = cold_start(w, fn, t)
             res.n_cold += 1
             inst = _Instance(fn, busy_until=t, expires=t, created=t)
             w.instances.setdefault(fn, []).append(inst)
-            n_alive = sum(len(ww.alive(fn, t)) for ww in workers)
+            n_alive = sum(len(ww.alive(fn)) for ww in workers)
             res.max_concurrent_instances = max(res.max_concurrent_instances,
                                                n_alive)
-
-        inst.busy_until = t + lat / 60.0
-        inst.expires = inst.busy_until + ka
-        w.n_served += 1
-        res.n_invocations += 1
-        res.total_latency_s += lat
-        res.per_fn_latency[fn] = res.per_fn_latency.get(fn, 0.0) + lat
-        res.per_fn_invocations[fn] = res.per_fn_invocations.get(fn, 0) + 1
-
+            begin_service(w, inst, start=t, svc_s=svc, req_t=t, idx=idx)
         window = policy.prewarm_after(fn, t)
         if window is not None:
-            heapq.heappush(prewarm_heap,
-                           (window[0], next(seq), fn, window[1]))
+            events.push(window[0], EventKind.PREWARM_SPAWN,
+                        (fn, window[1]))
 
+    def handle_event(ev) -> None:
+        if ev.kind == EventKind.INSTANCE_FREE:
+            w, inst = ev.payload
+            policy.on_completion(inst.fn, ev.time)
+            q = w.queues.get(inst.fn)
+            if q:
+                req_t, idx = q.popleft()
+                res.n_warm += 1
+                begin_service(w, inst, start=ev.time, svc_s=cost.warm_s,
+                              req_t=req_t, idx=idx)
+        elif ev.kind == EventKind.PREWARM_SPAWN:
+            fn, expire_at = ev.payload
+            spawn_prewarm(ev.time, fn, expire_at)
+        else:                          # KEEPALIVE_EXPIRY
+            w, inst, gen = ev.payload
+            if inst.gen == gen:        # else: superseded by a later reuse
+                retire(w, inst)
+
+    # ---------------------------------------------------------------- event loop
+    i = 0
+    while i < n_req or events:
+        key = events.peek_key()
+        if key is not None and (i >= n_req or
+                                key <= (float(all_t[i]), int(EventKind.ARRIVAL))):
+            handle_event(events.pop())
+        else:
+            handle_arrival(float(all_t[i]), int(all_fn[i]), i)
+            i += 1
+
+    if n_req and np.isnan(samples).any():
+        raise RuntimeError("fleet engine dropped requests: unfilled latency "
+                           "samples after the event loop drained")
+    res.latency_samples_s = samples
+    res.queue_wait_s = waits
+    res.sample_fn = all_fn
     res.evictions = sum(w.ledger.evictions for w in workers)
-    for w in workers:                    # flush residency of still-alive instances
-        for insts in w.instances.values():
-            for i in insts:
-                w.instance_min += i.expires - i.created
     res.instance_resident_min = sum(w.instance_min for w in workers)
     res.per_worker = [{
         "worker": w.idx,

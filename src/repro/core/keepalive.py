@@ -55,6 +55,9 @@ class KeepAlivePolicy:
 #   * keep_alive_min(fn)  — how long an idle instance stays warm after completion;
 #   * prewarm_after(fn,t) — optionally, a (spawn_at, expire_at) window in which a
 #     predictively pre-warmed instance should be standing by for the next arrival.
+# The fleet engine also feeds completion events (on_completion) so policies can
+# anchor decisions to when an instance actually went idle, not just when the
+# request arrived (under queueing the two diverge).
 # ---------------------------------------------------------------------------------
 
 class PrewarmPolicy:
@@ -65,6 +68,7 @@ class PrewarmPolicy:
     def __init__(self, keep_alive_min: float = 15.0):
         self._keep_alive_min = keep_alive_min
         self._last_arrival: dict = {}
+        self._last_completion: dict = {}  # fn -> last instance-free time (min)
         self._iats: dict = {}        # fn -> list of recent inter-arrival times (min)
         self.max_history = 64
 
@@ -76,6 +80,14 @@ class PrewarmPolicy:
             if len(hist) > self.max_history:
                 del hist[0]
         self._last_arrival[fn] = t_min
+
+    def on_completion(self, fn: int, t_min: float) -> None:
+        """The fleet engine's instance-free event: a request of ``fn`` finished
+        at ``t_min``. The keep-alive window runs from here — under queueing the
+        completion diverges from the arrival — so this is the anchor for
+        idle-time reasoning. The base class records it for subclasses; the
+        built-in policies are arrival-driven and don't consult it."""
+        self._last_completion[fn] = t_min
 
     def keep_alive_min(self, fn: int) -> float:
         return self._keep_alive_min

@@ -102,34 +102,94 @@ class RestoredImage:
         self._local: Dict[str, np.ndarray] = {}   # leaf key -> materialized array
         self._events: Dict[str, threading.Event] = {k: threading.Event()
                                                     for k in self._table.order}
+        self._claim_lock = threading.Lock()
+        self._claimed: set = set()         # leaves some thread is installing
+        self._install_error: Optional[BaseException] = None
         self._stream_thread: Optional[threading.Thread] = None
         self._streaming_started = False
         self.stats = server.stats
 
     # -- internals ---------------------------------------------------------------
+    def _claim(self, key: str) -> bool:
+        """Check-and-set: exactly one thread wins the right to install ``key``.
+
+        ``fault()`` and the background ``_stream_all`` thread can race on the
+        same leaf; without the claim both would fetch its pages (double
+        transfer, double-counted stats, concurrent ``_local`` writes)."""
+        with self._claim_lock:
+            if key in self._claimed:
+                return False
+            self._claimed.add(key)
+            if key not in self._local and self._events[key].is_set():
+                # stale marker from a failed install: re-arm so waiters block
+                # on this retry instead of reading an absent leaf
+                self._events[key].clear()
+            return True
+
     def _install_leaf(self, key: str) -> None:
-        e = self._table.entries[key]
-        pages = self._server.fetch_pages(e.first_page, e.n_pages)
-        raw = pages.reshape(-1)[: e.nbytes]
-        dt = np.dtype(e.dtype) if e.dtype != "bfloat16" else None
-        if dt is None:
-            import ml_dtypes
-            dt = np.dtype(ml_dtypes.bfloat16)
-        self._local[key] = np.frombuffer(raw.tobytes(), dtype=dt).reshape(e.shape)
+        """Fetch + materialize one leaf. Caller must have won ``_claim(key)``.
+
+        On failure the claim is released and the event set anyway so waiters
+        wake up and surface the error instead of blocking forever."""
+        try:
+            e = self._table.entries[key]
+            pages = self._server.fetch_pages(e.first_page, e.n_pages)
+            raw = pages.reshape(-1)[: e.nbytes]
+            dt = np.dtype(e.dtype) if e.dtype != "bfloat16" else None
+            if dt is None:
+                import ml_dtypes
+                dt = np.dtype(ml_dtypes.bfloat16)
+            self._local[key] = np.frombuffer(raw.tobytes(),
+                                             dtype=dt).reshape(e.shape)
+        except BaseException as exc:
+            with self._claim_lock:
+                self._claimed.discard(key)
+                self._install_error = exc
+            self._events[key].set()
+            raise
         self._events[key].set()
+
+    def _ensure_leaf(self, key: str) -> None:
+        """Make ``key`` resident: install it if we win the claim, else wait for
+        the thread that did (and surface its failure, if any)."""
+        if self._events[key].is_set() and key in self._local:
+            return
+        if self._claim(key):
+            self._install_leaf(key)
+            return
+        while True:
+            self._events[key].wait()
+            if key in self._local:
+                return
+            with self._claim_lock:
+                installing = key in self._claimed
+            if not installing:
+                # nobody is retrying: the last installer failed for good
+                raise RuntimeError(
+                    f"leaf {key!r} failed to install in another thread"
+                ) from self._install_error
+            # an in-flight retry holds the claim; its clear-on-claim re-armed
+            # the event, so the next wait() blocks until it resolves
 
     def _stream_all(self, skip: Sequence[str] = ()) -> None:
         t0 = time.perf_counter()
         for key in self._table.order:      # layer order == execution order
-            if key in skip or self._events[key].is_set():
+            if key in skip or key in self._local:
                 continue
-            self._install_leaf(key)
+            if self._claim(key):           # else: a concurrent fault owns it
+                try:
+                    self._install_leaf(key)
+                except Exception:
+                    # recorded in _install_error and the claim was released —
+                    # keep streaming; wait_all()/fault() retry this leaf
+                    continue
         self.stats.stream_s += time.perf_counter() - t0
 
     def _start_background_stream(self, skip: Sequence[str] = ()) -> None:
-        if self._streaming_started:
-            return
-        self._streaming_started = True
+        with self._claim_lock:             # two first-faults must not both stream
+            if self._streaming_started:
+                return
+            self._streaming_started = True
         self._stream_thread = threading.Thread(
             target=self._stream_all, args=(tuple(skip),), daemon=True)
         self._stream_thread.start()
@@ -137,15 +197,15 @@ class RestoredImage:
     # -- the fault path ------------------------------------------------------------
     def fault(self, key: str) -> np.ndarray:
         """First touch of a leaf by the executing function (userfaultfd analogue)."""
-        if self._events[key].is_set():
+        if self._events[key].is_set() and key in self._local:
             return self._local[key]
         self.stats.faults += 1
         t0 = time.perf_counter()
         if self.policy == RestorePolicy.LAZY:
-            self._install_leaf(key)
+            self._ensure_leaf(key)
         elif self.policy == RestorePolicy.BULK:
             # first fault: fetch the faulting leaf synchronously, then stream the rest
-            self._install_leaf(key)
+            self._ensure_leaf(key)
             self._start_background_stream(skip=(key,))
         else:
             # NO_LAZY / NO_PAGESERVER should have pre-installed everything
@@ -158,14 +218,19 @@ class RestoredImage:
             self._start_background_stream()
             if self._stream_thread is not None:
                 self._stream_thread.join()
+            # leaves claimed by concurrent faults finish outside the stream
+            # thread, and a died-mid-stream thread leaves some unclaimed:
+            # _ensure_leaf waits for live installers, retries dead ones
+            # inline, and surfaces persistent failures instead of hanging
+            for key in self._table.order:
+                self._ensure_leaf(key)
         elif self.policy == RestorePolicy.LAZY:
             for key in self._table.order:
                 self.fault(key)
         # NO_LAZY / NO_PAGESERVER are already resident
 
     def resident_fraction(self) -> float:
-        done = sum(1 for e in self._events.values() if e.is_set())
-        return done / max(len(self._events), 1)
+        return len(self._local) / max(len(self._events), 1)
 
     def as_pytree(self) -> Any:
         """Full parameter pytree (blocks until resident)."""
@@ -211,4 +276,5 @@ class MigrationClient:
                     dt = np.dtype(ml_dtypes.bfloat16)
                 restored._local[key] = np.frombuffer(raw.tobytes(), dtype=dt).reshape(e.shape)
                 restored._events[key].set()
+            restored._claimed.update(md.page_table.order)
         return restored

@@ -80,28 +80,43 @@ class CapacityLedger:
         if key in self.entries:
             self.entries[key].refcount = max(0, self.entries[key].refcount - 1)
 
-    def _pick_victim(self) -> Optional[str]:
+    def _pick_victim(self, exclude: Optional[str] = None) -> Optional[str]:
         candidates = [(e.last_used, k) for k, e in self.entries.items()
-                      if not e.pinned and e.refcount == 0]
+                      if not e.pinned and e.refcount == 0 and k != exclude]
         return min(candidates)[1] if candidates else None
+
+    def _reclaim(self, headroom: int, exclude: Optional[str] = None) -> list:
+        """Evict LRU entries until ``headroom`` more bytes fit; returns the
+        evicted keys. ``exclude`` protects the entry being (re-)admitted."""
+        evicted = []
+        if self.capacity_bytes is None:
+            return evicted
+        while self.used_bytes() + headroom > self.capacity_bytes:
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                break
+            del self.entries[victim]
+            self.evictions += 1
+            evicted.append(victim)
+        return evicted
 
     def admit(self, key: str, nbytes: int, now: float,
               pinned: bool = False) -> list:
         """Admit ``key``; returns the keys evicted to make room. The entry is
         admitted even if eviction cannot free enough space (the pool never
-        refuses the image it was asked for — same as the manager)."""
+        refuses the image it was asked for — same as the manager).
+
+        Re-admitting a resident key refreshes its size (a resized/reshared
+        image must not keep its stale ``nbytes``) and re-runs eviction if it
+        grew — the entry itself is never its own victim."""
         if key in self.entries:
+            entry = self.entries[key]
+            grew = nbytes > entry.nbytes
+            entry.nbytes = nbytes
+            entry.pinned = pinned          # refresh pin state, not just size
             self.touch(key, now)
-            return []
-        evicted = []
-        if self.capacity_bytes is not None:
-            while self.used_bytes() + nbytes > self.capacity_bytes:
-                victim = self._pick_victim()
-                if victim is None:
-                    break
-                del self.entries[victim]
-                self.evictions += 1
-                evicted.append(victim)
+            return self._reclaim(0, exclude=key) if grew else []
+        evicted = self._reclaim(nbytes)
         self.entries[key] = LedgerEntry(nbytes=nbytes, last_used=now,
                                         pinned=pinned)
         return evicted

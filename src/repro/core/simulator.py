@@ -5,6 +5,9 @@ Discrete-event simulation over per-function invocation traces:
   * each function keeps at most one instance; an invocation within the keep-alive
     window is a **warm start**, otherwise a **cold start** (the >99 % case the paper
     scopes to, §2.2);
+  * queue-accurate: an arrival while the (single) instance is still executing
+    waits for it — latency = queue delay + warm cost, and the instance's
+    completion time never rewinds (Lindley recursion over each trace);
   * cold-start latency comes from a per-method :class:`CostModel` — either measured
     numbers produced by ``benchmarks/bench_coldstart.py`` on this machine, or the
     paper's own Table 2 values for a paper-faithful simulation;
@@ -69,6 +72,16 @@ def method_memory_bytes(cost: CostModel, method: str, n_functions: int,
     }[method]
 
 
+def latency_percentiles(samples: np.ndarray) -> Dict[str, float]:
+    """P50/P95/P99 (+ mean/max) over per-request latency samples (seconds)."""
+    samples = np.asarray(samples, np.float64)
+    if samples.size == 0:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
+    p50, p95, p99 = np.percentile(samples, [50.0, 95.0, 99.0])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+            "mean": float(samples.mean()), "max": float(samples.max())}
+
+
 @dataclass
 class SimResult:
     method: str
@@ -79,10 +92,75 @@ class SimResult:
     memory_bytes: int
     per_fn_latency: Dict[int, float] = field(default_factory=dict)
     per_fn_invocations: Dict[int, int] = field(default_factory=dict)
+    n_queued: int = 0                    # arrivals that waited on a busy instance
+    queue_delay_s: float = 0.0           # total time arrivals spent waiting
+    latency_samples_s: np.ndarray = field(
+        default_factory=lambda: np.empty(0))   # per request (per-trace order)
+    sample_fn: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))  # fn index per sample
 
     @property
     def avg_latency_s(self) -> float:
         return self.total_latency_s / max(self.n_invocations, 1)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        return latency_percentiles(self.latency_samples_s)
+
+
+def _simulate_trace(arrivals: np.ndarray, ka: float, cold_s: float,
+                    warm_s: float):
+    """Queue-accurate single-instance scan over one trace.
+
+    Returns ``(lats_s, waits_s, n_cold)``. An arrival within the keep-alive
+    window of the previous completion is warm; if the instance is still
+    executing it queues behind it (single-server FIFO), so its latency is
+    queue delay + warm cost and the completion time never rewinds.
+
+    Vectorized: an arrival whose gap to its predecessor is <= ka is
+    *guaranteed* warm (the previous completion is >= the previous arrival, so
+    its expiry covers the gap). Only gap > ka arrivals can cold-start, which
+    splits the trace into segments headed by a potential cold start followed
+    by all-warm interiors. Each interior is a Lindley recursion with constant
+    (warm) service — solved in closed form with a running maximum — so a
+    multi-million-arrival high-rate trace costs a few numpy passes, not a
+    Python loop per request.
+    """
+    n = len(arrivals)
+    lats = np.empty(n)
+    waits = np.zeros(n)
+    if n == 0:
+        return lats, waits, 0
+    w_min = warm_s / 60.0
+    heads = np.concatenate(
+        ([0], np.flatnonzero(np.diff(arrivals) > ka) + 1))
+    n_cold = 0
+    free_at = -np.inf                  # completion time of the in-flight request
+    for s, h in enumerate(heads):
+        end = heads[s + 1] if s + 1 < len(heads) else n    # segment [h, end)
+        t_h = float(arrivals[h])
+        if t_h > free_at + ka:
+            # instance expired (or first arrival): fresh cold start, no wait
+            n_cold += 1
+            start, svc = t_h, cold_s
+        else:
+            # warm; a long backlog can still cover a gap > ka, so the head may
+            # queue behind the in-flight request
+            start, svc = max(t_h, free_at), warm_s
+        waits[h] = (start - t_h) * 60.0
+        lats[h] = waits[h] + svc
+        free_at = start + svc / 60.0
+        if end > h + 1:
+            # interior j in (h, end): completion c_j = max(t_j, c_{j-1}) + w.
+            # With u_p = t_p - p*w (p = interior position), the recursion
+            # unrolls to c_p = (p+1)*w + max(c_head, runmax(u_0..u_p)).
+            seg = arrivals[h + 1: end]
+            p = np.arange(end - h - 1, dtype=np.float64)
+            peak = np.maximum(np.maximum.accumulate(seg - p * w_min), free_at)
+            starts = peak + p * w_min                     # = c_j - w_min
+            waits[h + 1: end] = (starts - seg) * 60.0
+            lats[h + 1: end] = waits[h + 1: end] + warm_s
+            free_at = float(starts[-1]) + w_min
+    return lats, waits, n_cold
 
 
 def simulate(
@@ -95,31 +173,36 @@ def simulate(
     keep_alive = keep_alive if keep_alive is not None else KeepAlivePolicy(15.0)
     cold_latency = method_cold_latency_s(cost, method)
 
-    n_cold = n_warm = 0
-    total = 0.0
+    n_cold = n_warm = n_queued = 0
+    total = queue_delay = 0.0
     per_fn_lat: Dict[int, float] = {}
     per_fn_n: Dict[int, int] = {}
+    sample_chunks: List[np.ndarray] = []
+    fn_chunks: List[np.ndarray] = []
     for tr in traces:
-        expiry = -np.inf
-        lat_sum = 0.0
-        for t_min in tr.arrivals_min:
-            if t_min <= expiry:
-                n_warm += 1
-                lat = cost.warm_s
-            else:
-                n_cold += 1
-                lat = cold_latency
-            lat_sum += lat
-            # instance busy then kept alive from completion
-            expiry = t_min + lat / 60.0 + keep_alive.keep_alive_min
+        lats, waits, cold = _simulate_trace(
+            np.asarray(tr.arrivals_min, np.float64),
+            keep_alive.keep_alive_min, cold_latency, cost.warm_s)
+        n_cold += cold
+        n_warm += len(lats) - cold
+        n_queued += int((waits > 0).sum())
+        queue_delay += float(waits.sum())
+        lat_sum = float(lats.sum())
         total += lat_sum
         per_fn_lat[tr.fn_index] = lat_sum
         per_fn_n[tr.fn_index] = len(tr.arrivals_min)
+        sample_chunks.append(lats)
+        fn_chunks.append(np.full(len(lats), tr.fn_index, np.int64))
 
     memory = method_memory_bytes(cost, method, len(traces), shared_images)
     return SimResult(method=method, n_invocations=n_cold + n_warm, n_cold=n_cold,
                      n_warm=n_warm, total_latency_s=total, memory_bytes=memory,
-                     per_fn_latency=per_fn_lat, per_fn_invocations=per_fn_n)
+                     per_fn_latency=per_fn_lat, per_fn_invocations=per_fn_n,
+                     n_queued=n_queued, queue_delay_s=queue_delay,
+                     latency_samples_s=(np.concatenate(sample_chunks)
+                                        if sample_chunks else np.empty(0)),
+                     sample_fn=(np.concatenate(fn_chunks)
+                                if fn_chunks else np.empty(0, np.int64)))
 
 
 def quartile_latencies(traces: List[Trace], result: SimResult) -> Dict[str, float]:
@@ -130,6 +213,21 @@ def quartile_latencies(traces: List[Trace], result: SimResult) -> Dict[str, floa
         lat = sum(result.per_fn_latency.get(t.fn_index, 0.0) for t in members)
         n = sum(result.per_fn_invocations.get(t.fn_index, 0) for t in members)
         out[name] = lat / max(n, 1)
+    return out
+
+
+def quartile_percentiles(traces: List[Trace], result) -> Dict[str, Dict[str, float]]:
+    """P50/P95/P99 per invocation-rate quartile, from the per-request latency
+    samples. ``result`` is a SimResult or FleetResult (duck-typed: needs
+    ``latency_samples_s`` + ``sample_fn``)."""
+    groups = quartile_groups(traces)
+    samples = np.asarray(result.latency_samples_s)
+    sample_fn = np.asarray(result.sample_fn)
+    out = {}
+    for name, members in groups.items():
+        fns = np.array([t.fn_index for t in members], np.int64)
+        mask = np.isin(sample_fn, fns)
+        out[name] = latency_percentiles(samples[mask])
     return out
 
 

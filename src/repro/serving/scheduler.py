@@ -30,17 +30,24 @@ def place_invocation(
     load: Callable,
     has_warm: Optional[Callable] = None,
     holds_image: Optional[Callable] = None,
+    queue_depth: Optional[Callable] = None,
 ):
     """Image-affinity placement over ``workers`` (any hashable ids).
 
     Priority: (1) a worker with a warm idle instance of the function,
     (2) a worker whose pool already holds the live dependency image,
-    (3) the least-loaded worker. Ties break on position in ``workers``, so
-    placement is deterministic and worker ids never need to be orderable."""
+    (3) the least-loaded worker. ``queue_depth`` (requests waiting for an
+    instance, not yet running) adds to the load — a worker with a deep queue
+    is as bad as one with that many in-flight requests. Ties break on position
+    in ``workers``, so placement is deterministic and worker ids never need to
+    be orderable."""
     if not workers:
         return None
     rank = {w: i for i, w in enumerate(workers)}
-    key = lambda w: (load(w), rank[w])  # noqa: E731
+    if queue_depth is not None:
+        key = lambda w: (load(w) + queue_depth(w), rank[w])  # noqa: E731
+    else:
+        key = lambda w: (load(w), rank[w])  # noqa: E731
     if has_warm is not None:
         warm = [w for w in workers if has_warm(w)]
         if warm:

@@ -1,19 +1,25 @@
-"""Multi-worker fleet simulator: concurrency, placement, capacity accounting,
-pre-warm policies, and the degenerate-case equivalence with simulate()."""
+"""Multi-worker fleet simulator: the discrete-event engine (queueing, monotone
+busy_until, horizon-clamped residency, prewarm draining), concurrency,
+placement, capacity accounting, pre-warm policies, and the degenerate-case
+equivalence with simulate()."""
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
+from repro.core.events import EventKind, EventQueue
 from repro.core.fleet import FleetConfig, simulate_fleet
 from repro.core.keepalive import (HistogramKeepAlive, KeepAlivePolicy,
                                   PrewarmPolicy, SpesPrewarm)
 from repro.core.pool import CapacityLedger
-from repro.core.simulator import (CostModel, memory_saving_fraction,
-                                  quartile_latencies, simulate)
+from repro.core.simulator import (CostModel, latency_percentiles,
+                                  memory_saving_fraction, quartile_latencies,
+                                  quartile_percentiles, simulate)
 from repro.core.traces import (Trace, assign_images, generate_fleet_traces,
                                generate_traces, sharing_degrees, zipf_weights)
 from repro.serving.scheduler import FleetScheduler, place_invocation
 
 CM = CostModel.paper_table2()
+COLD_WS = CM.cold_warmswap_s + CM.container_s     # 1.39 s
 
 
 def _trace(fn, arrivals, image=0):
@@ -68,6 +74,127 @@ def test_instance_cap_serializes_like_paper_model():
     r = simulate_fleet(traces, "warmswap", CM, cfg)
     assert r.n_cold == 1 and r.n_warm == 1
     assert r.max_concurrent_instances == 1
+
+
+# ---------------------------------------------------------------------------------
+# Queueing semantics (the discrete-event engine)
+# ---------------------------------------------------------------------------------
+
+def test_capped_overlap_latency_includes_queue_delay():
+    """An at-cap arrival waits for the instance-free event; its latency is the
+    hand-computed queue delay + warm cost, and busy_until never rewinds."""
+    traces = [_trace(0, [10.0, 10.001])]
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    r = simulate_fleet(traces, "warmswap", CM, cfg)
+    free_at = 10.0 + COLD_WS / 60.0                 # first (cold) completion
+    expected_wait = (free_at - 10.001) * 60.0
+    assert r.latency_samples_s[0] == pytest.approx(COLD_WS)
+    assert r.latency_samples_s[1] == pytest.approx(expected_wait + CM.warm_s)
+    assert r.n_queued == 1
+    assert r.queue_delay_s == pytest.approx(expected_wait)
+    assert r.total_latency_s == pytest.approx(r.latency_samples_s.sum())
+    # busy_until monotone: each service starts no earlier than the previous
+    # completion on the single instance
+    starts = np.array([10.0, 10.001]) + r.queue_wait_s / 60.0
+    ends = starts + np.array([COLD_WS, CM.warm_s]) / 60.0
+    assert starts[1] >= ends[0] - 1e-12
+    # the same trace against queue-accurate simulate(): exact agreement
+    rs = simulate(traces, "warmswap", CM, KeepAlivePolicy(15.0))
+    assert rs.total_latency_s == pytest.approx(r.total_latency_s)
+    assert rs.n_queued == 1
+
+
+def test_contended_burst_p99_exceeds_average():
+    """A burst on one capped instance: queue delays grow linearly across the
+    burst, so tail latency is strictly above the mean (the load signal the
+    arrival-ordered loop could never produce)."""
+    # arrival gap (0.6 ms) < warm service (4 ms): the queue builds during the
+    # initial cold start and keeps growing, so waits rise along the burst
+    burst = [_trace(0, [10.0 + 1e-5 * k for k in range(20)])]
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    r = simulate_fleet(burst, "warmswap", CM, cfg)
+    assert r.n_queued == 19
+    pct = r.latency_percentiles()
+    assert pct["p99"] > r.avg_latency_s
+    assert pct["p99"] >= pct["p95"] >= pct["p50"] >= 0.0
+    # waits are strictly increasing along the FIFO queue
+    assert (np.diff(r.queue_wait_s) > 0).all()
+
+
+def test_uncapped_overlap_still_spawns_and_percentiles_populate():
+    traces = [_trace(0, [10.0, 10.001])]
+    r = simulate_fleet(traces, "warmswap", CM, FleetConfig(n_workers=1))
+    assert r.n_queued == 0 and r.queue_delay_s == 0.0
+    assert len(r.latency_samples_s) == 2
+    assert np.isfinite(r.latency_samples_s).all()
+    qp = quartile_percentiles(traces, r)
+    assert set(qp) == {"lowest", "25-50%", "50-75%", "highest"}
+
+
+def test_prewarm_events_after_last_arrival_fire_or_are_dropped():
+    """A pre-warm window inside the horizon fires; one scheduled past the last
+    arrival is drained and accounted as dropped, not silently lost."""
+    class NearAndFar(PrewarmPolicy):
+        def __init__(self):
+            super().__init__(keep_alive_min=0.01)    # instances die fast
+        def prewarm_after(self, fn, t_min):
+            return (t_min + 1.0, t_min + 5.0)
+    traces = [_trace(0, [10.0, 12.0])]
+    cfg = FleetConfig(n_workers=1, prewarm=NearAndFar())
+    r = simulate_fleet(traces, "warmswap", CM, cfg)
+    # window from t=10 spawns at 11 (inside horizon=12) and serves t=12 warm;
+    # window from t=12 would spawn at 13 > horizon: dropped
+    assert r.prewarm_spawns == 1
+    assert r.prewarm_hits == 1
+    assert r.prewarm_dropped == 1
+    assert r.n_cold == 1 and r.n_warm == 1
+
+
+def test_residency_clamped_to_horizon_hand_computed():
+    """3 arrivals, one instance: keep-alive extends past the last arrival, but
+    instance_resident_min clamps at the horizon — exactly horizon - created."""
+    traces = [_trace(0, [10.0, 12.0, 20.0])]
+    r = simulate_fleet(traces, "warmswap", CM, FleetConfig(n_workers=1))
+    # one instance created at 10; last completion 20 + warm_s/60, expiry
+    # ~35.00007 min, clamped to horizon 20.0 -> residency = 20 - 10 = 10
+    assert r.horizon_min == 20.0
+    assert r.n_cold == 1 and r.n_warm == 2
+    assert r.instance_resident_min == pytest.approx(10.0)
+
+
+@given(st.lists(st.floats(0.001, 2.0), min_size=1, max_size=15),
+       st.floats(0.15, 0.85))
+@settings(max_examples=25, deadline=None)
+def test_total_latency_monotone_in_offered_load(gaps, compress):
+    """Compressing inter-arrival gaps (more offered load, identical work) can
+    only increase total latency: Lindley's recursion under a fixed service
+    sequence. Keep-alive is huge so the service sequence (1 cold + warms)
+    doesn't change with compression."""
+    arrivals = 1.0 + np.cumsum(np.asarray(gaps))
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1,
+                      keep_alive_min=1e6)
+    sparse = simulate_fleet([_trace(0, arrivals)], "warmswap", CM, cfg)
+    dense = simulate_fleet([_trace(0, 1.0 + compress * (arrivals - 1.0))],
+                           "warmswap", CM, cfg)
+    assert dense.total_latency_s >= sparse.total_latency_s - 1e-9
+    assert (dense.queue_wait_s >= -1e-12).all()
+    assert dense.queue_delay_s >= sparse.queue_delay_s - 1e-9
+
+
+def test_event_queue_tiebreak_order():
+    q = EventQueue()
+    q.push(5.0, EventKind.KEEPALIVE_EXPIRY, "expiry")
+    q.push(5.0, EventKind.INSTANCE_FREE, "free")
+    q.push(5.0, EventKind.PREWARM_SPAWN, "prewarm")
+    q.push(4.0, EventKind.KEEPALIVE_EXPIRY, "early")
+    order = [q.pop().payload for _ in range(len(q))]
+    assert order == ["early", "free", "prewarm", "expiry"]
+    # an arrival at t=5 ranks after instance-free/prewarm, before expiry
+    q.push(5.0, EventKind.INSTANCE_FREE, None)
+    assert q.peek_key() <= (5.0, int(EventKind.ARRIVAL))
+    q.pop()
+    q.push(5.0, EventKind.KEEPALIVE_EXPIRY, None)
+    assert not (q.peek_key() <= (5.0, int(EventKind.ARRIVAL)))
 
 
 def test_warm_reuse_after_completion():
@@ -159,6 +286,26 @@ def test_capacity_ledger_lru_and_pins():
     led2.acquire("ref")
     assert led2.admit("x", 50, now=3.0) == []  # nothing evictable: admit anyway
     assert led2.used_bytes() == 150
+
+
+def test_capacity_ledger_readmit_refreshes_size():
+    """Re-admitting a resident key must refresh its nbytes (resized/reshared
+    image), re-run eviction when it grew, and never evict itself."""
+    led = CapacityLedger(capacity_bytes=100)
+    led.admit("a", 40, now=1.0)
+    led.admit("b", 40, now=2.0)
+    evicted = led.admit("a", 90, now=3.0)      # grew: 'b' must go, never 'a'
+    assert evicted == ["b"]
+    assert led.holds("a") and not led.holds("b")
+    assert led.entries["a"].nbytes == 90 and led.used_bytes() == 90
+    led.admit("a", 10, now=4.0)                # shrink also refreshes
+    assert led.used_bytes() == 10
+    # unchanged size: pure touch, no eviction
+    led.admit("c", 80, now=5.0)
+    assert led.admit("c", 80, now=6.0) == [] and led.used_bytes() == 90
+    # re-admit also refreshes pin state, not just size
+    led.admit("c", 80, now=7.0, pinned=True)
+    assert led.entries["c"].pinned
 
 
 # ---------------------------------------------------------------------------------

@@ -111,6 +111,93 @@ def test_no_pageserver_is_one_big_request():
     assert restored.resident_fraction() == 1.0
 
 
+@pytest.mark.parametrize("policy", [RestorePolicy.BULK, RestorePolicy.LAZY])
+def test_restore_fault_storm_fetches_each_leaf_once(policy):
+    """Regression: fault() and the background stream used to race on the same
+    leaf — double page fetch, double-counted stats, concurrent _local writes.
+    The per-leaf claim must keep pages_transferred == n_pages under a storm of
+    concurrent faults."""
+    import threading
+
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params(d=128))
+    restored = mgr.request_migration("img", policy)
+    keys = list(restored.metadata.page_table.order)
+    errors = []
+
+    def storm(order):
+        try:
+            for k in order:
+                restored.fault(k)
+        except Exception as exc:       # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=storm, args=(keys[::d],))
+               for d in (1, -1, 1, -1)]
+    for th in threads:
+        th.start()
+    restored.wait_all()
+    for th in threads:
+        th.join()
+    assert not errors
+    assert restored.resident_fraction() == 1.0
+    # each leaf's page span crossed the link exactly once
+    assert (restored.stats.pages_transferred
+            == restored.metadata.page_table.n_pages)
+    # and the restored tree is still byte-identical to the source
+    for a, b in zip(jax.tree_util.tree_leaves(_params(d=128)),
+                    jax.tree_util.tree_leaves(restored.as_pytree())):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_bulk_stream_death_does_not_deadlock_wait_all():
+    """If the background stream thread dies mid-stream, wait_all() must retry
+    the unfinished leaves inline instead of waiting forever on events the dead
+    thread never set."""
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params(d=128))
+    restored = mgr.request_migration("img", RestorePolicy.BULK)
+    orig = restored._server.fetch_pages
+    state = {"calls": 0}
+
+    def flaky(first_page, n_pages):
+        state["calls"] += 1
+        if state["calls"] == 2:            # first background-stream fetch
+            raise IOError("link flap")
+        return orig(first_page, n_pages)
+
+    restored._server.fetch_pages = flaky
+    restored.fault(restored.metadata.page_table.order[0])   # starts the stream
+    restored.wait_all()                    # must not hang; retries inline
+    assert restored.resident_fraction() == 1.0
+
+
+def test_restore_install_failure_surfaces_and_is_retryable():
+    """A failed page fetch must release the per-leaf claim and wake waiters
+    with an error — never deadlock them — and a retry must succeed."""
+    mgr = DependencyManager(page_size=1024)
+    mgr.register_image("img", "test", lambda: _params())
+    restored = mgr.request_migration("img", RestorePolicy.LAZY)
+    key = restored.metadata.page_table.order[0]
+    orig = restored._server.fetch_pages
+    state = {"fail": True}
+
+    def flaky(first_page, n_pages):
+        if state["fail"]:
+            state["fail"] = False
+            raise IOError("link down")
+        return orig(first_page, n_pages)
+
+    restored._server.fetch_pages = flaky
+    with pytest.raises(IOError):
+        restored.fault(key)
+    assert restored.resident_fraction() == 0.0
+    out = restored.fault(key)                  # claim released: retry works
+    assert out.shape == restored.metadata.page_table.entries[key].shape
+    restored.wait_all()
+    assert restored.resident_fraction() == 1.0
+
+
 # ---------------------------------------------------------------------------------
 # Pool behaviour
 # ---------------------------------------------------------------------------------
