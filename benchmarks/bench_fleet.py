@@ -164,6 +164,116 @@ def run() -> Dict:
              f"queue_delay={r.queue_delay_s:.2f}s")
         assert s.size == 0 or pct["p99"] >= pct["p50"], "percentiles inverted"
 
+    # --------------------------------------------------------- page-cost model
+    # Cold starts priced by page transfer volume (core/costmodel.py) instead
+    # of scalar constants, plus the cluster-shared image cache tier. Cells:
+    #   * degenerate contract — infinite bandwidth reproduces the scalar
+    #     engine exactly (also covered by tests/test_costmodel.py);
+    #   * latency vs image size — HotSwap (shared image, half-resident,
+    #     remote tier) must lie STRICTLY between warm and cold at every size,
+    #     and the dependency-loading speedup at the paper's ~230 MB image
+    #     lands inside the paper's 2.2-3.2x band;
+    #   * cache footprint — HotSwap's shared tier holds one image per
+    #     dependency vs Prebaking's snapshot per function (the 88 % story
+    #     restated at the cluster-cache level);
+    #   * a capacity-bounded shared cache showing remote hits and source
+    #     misses under placement that is bandwidth/residency aware.
+    from repro.core.costmodel import PageCostModel
+
+    model = PageCostModel(cost=cm)
+    deg_model = PageCostModel.degenerate(cm)
+    page_out: Dict = {}
+    for method in METHODS:
+        rf = simulate_fleet(traces10, method, cm,
+                            FleetConfig(n_workers=1, max_instances_per_fn=1,
+                                        page_cost=deg_model))
+        rs = simulate(traces10, method, cm, KeepAlivePolicy(15.0))
+        assert (abs(rf.total_latency_s - rs.total_latency_s) < 1e-9
+                and rf.memory_bytes == rs.memory_bytes), \
+            f"degenerate page model diverged from simulate() for {method}"
+    page_out["degenerate_equals_scalar"] = True
+
+    sizes_mb = [64, 128, 230, 512] if smoke else [32, 64, 128, 230, 512, 1024]
+    size_cell: Dict = {}
+    for mb in sizes_mb:
+        nbytes = mb << 20
+        total = model.image_pages(nbytes)
+        warm_s = cm.warm_s
+        hotswap_s = model.cold_latency_s("warmswap", tier="remote",
+                                         resident_pages=total // 2,
+                                         image_bytes=nbytes)
+        cold_s = model.cold_latency_s("baseline", image_bytes=nbytes)
+        speedup = model.dependency_loading_speedup(tier="local",
+                                                   image_bytes=nbytes)
+        assert warm_s < hotswap_s < cold_s, \
+            f"HotSwap latency not strictly between warm and cold at {mb} MB"
+        size_cell[f"{mb}MB"] = {
+            "pages": total, "warm_s": warm_s, "hotswap_s": hotswap_s,
+            "cold_s": cold_s, "dependency_loading_speedup": speedup,
+        }
+        emit(f"fleet/page_model/image={mb}MB", hotswap_s * 1e6,
+             f"warm={warm_s * 1e3:.1f}ms cold={cold_s * 1e3:.0f}ms "
+             f"pages={total} dep_speedup={speedup:.2f}x")
+    page_out["latency_vs_image_size"] = size_cell
+    paper_speedup = size_cell["230MB"]["dependency_loading_speedup"]
+    assert 2.2 <= paper_speedup <= 3.2, \
+        f"dependency-loading speedup {paper_speedup:.2f}x outside the " \
+        f"paper's 2.2-3.2x band at the ~230 MB paper-scale image"
+    page_out["dependency_loading_speedup_paper_scale"] = paper_speedup
+    emit("fleet/page_model/dep_speedup_paper_scale", paper_speedup,
+         "baseline/warmswap dependency-loading ratio (paper band: 2.2-3.2x)")
+
+    rw = simulate_fleet(traces, "warmswap", cm,
+                        FleetConfig(n_workers=4, page_cost=model))
+    rp = simulate_fleet(traces, "prebaking", cm,
+                        FleetConfig(n_workers=4, page_cost=model))
+    _validated_samples(rw, "page_model/warmswap")
+    _validated_samples(rp, "page_model/prebaking")
+    assert rp.shared_cache_peak_bytes > rw.shared_cache_peak_bytes > 0
+    footprint_saving = 1.0 - rw.shared_cache_peak_bytes / rp.shared_cache_peak_bytes
+    # the same comparison on the HEADLINE workload (10 fns, ONE image): the
+    # shared tier holds 1 image vs 10 snapshots -> 90 % (the 88 % headline
+    # counts warmswap's per-fn metadata too; the tier holds images only)
+    deg_page = FleetConfig(n_workers=1, max_instances_per_fn=1, page_cost=model)
+    rwh = simulate_fleet(traces10, "warmswap", cm, deg_page)
+    rph = simulate_fleet(traces10, "prebaking", cm, deg_page)
+    headline_saving = 1.0 - (rwh.shared_cache_peak_bytes
+                             / rph.shared_cache_peak_bytes)
+    assert headline_saving > 0.85
+    page_out["cache_footprint"] = {
+        "headline_workload_saving_fraction": headline_saving,
+        "hotswap_shared_peak_mb": rw.shared_cache_peak_bytes / 1e6,
+        "prebaking_shared_peak_mb": rp.shared_cache_peak_bytes / 1e6,
+        "hotswap_peak_memory_mb": rw.memory_bytes / 1e6,
+        "prebaking_peak_memory_mb": rp.memory_bytes / 1e6,
+        "saving_fraction": footprint_saving,
+        "hotswap_tiers": {"local": rw.cache_local_hits,
+                          "remote": rw.cache_remote_hits,
+                          "miss": rw.cache_misses},
+        "hotswap_pages_transferred": rw.pages_transferred,
+    }
+    emit("fleet/page_model/cache_footprint", footprint_saving * 100,
+         f"shared-tier saving % (hotswap {rw.shared_cache_peak_bytes >> 20}MB "
+         f"vs prebaking {rp.shared_cache_peak_bytes >> 20}MB)")
+
+    rb = simulate_fleet(traces, "warmswap", cm,
+                        FleetConfig(n_workers=4, placement="round_robin",
+                                    page_cost=model,
+                                    worker_capacity_bytes=cm.image_bytes,
+                                    shared_cache_bytes=2 * cm.image_bytes))
+    _validated_samples(rb, "page_model/bounded_cache")
+    page_out["bounded_shared_cache"] = {
+        "avg_latency_s": rb.avg_latency_s,
+        "tiers": {"local": rb.cache_local_hits, "remote": rb.cache_remote_hits,
+                  "miss": rb.cache_misses},
+        "cluster_evictions": rb.shared_cache_evictions,
+        "pages_transferred": rb.pages_transferred,
+    }
+    emit("fleet/page_model/bounded_cache", rb.avg_latency_s * 1e6,
+         f"local={rb.cache_local_hits} remote={rb.cache_remote_hits} "
+         f"miss={rb.cache_misses} evict={rb.shared_cache_evictions}")
+    out["page_model"] = page_out
+
     # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
     for placement in ("affinity", "least_loaded", "round_robin"):

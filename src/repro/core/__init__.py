@@ -16,15 +16,16 @@ Public API:
   * workloads   — FunctionBench-analogue suite (Table 1)
 """
 from repro.core.coldstart import ColdStartConfig, ColdStartOrchestrator, PhaseTimes
+from repro.core.costmodel import PageCostModel
 from repro.core.events import Event, EventKind, EventQueue
 from repro.core.fleet import FleetConfig, FleetResult, simulate_fleet
 from repro.core.image import ImageMetadata, LiveDependencyImage, build_image
-from repro.core.keepalive import (HistogramKeepAlive, KeepAlivePolicy,
-                                  PrewarmPolicy, SpesPrewarm,
+from repro.core.keepalive import (BytesAwareKeepAlive, HistogramKeepAlive,
+                                  KeepAlivePolicy, PrewarmPolicy, SpesPrewarm,
                                   expected_cold_starts)
 from repro.core.migration import LinkModel, MigrationClient, PageServer, RestorePolicy
 from repro.core.pages import PageTable, materialize, paginate
-from repro.core.pool import CapacityLedger, DependencyManager
+from repro.core.pool import CapacityLedger, ClusterImageCache, DependencyManager
 from repro.core.registry import FunctionRegistry
 from repro.core.simulator import CostModel, memory_saving_fraction, simulate
 from repro.core.traces import generate_fleet_traces, generate_traces
@@ -35,10 +36,11 @@ __all__ = [
     "FleetConfig", "FleetResult", "simulate_fleet",
     "ImageMetadata", "LiveDependencyImage", "build_image",
     "KeepAlivePolicy", "expected_cold_starts",
-    "PrewarmPolicy", "HistogramKeepAlive", "SpesPrewarm",
+    "PrewarmPolicy", "HistogramKeepAlive", "SpesPrewarm", "BytesAwareKeepAlive",
     "LinkModel", "MigrationClient", "PageServer", "RestorePolicy",
     "PageTable", "materialize", "paginate",
-    "CapacityLedger", "DependencyManager", "FunctionRegistry",
-    "CostModel", "memory_saving_fraction", "simulate",
+    "CapacityLedger", "ClusterImageCache", "DependencyManager",
+    "FunctionRegistry",
+    "CostModel", "PageCostModel", "memory_saving_fraction", "simulate",
     "generate_traces", "generate_fleet_traces",
 ]

@@ -55,14 +55,26 @@ class EventQueue:
         self._seq = itertools.count()
 
     def push(self, time: float, kind: EventKind, payload: Any = None) -> None:
+        """Schedule an event.
+
+        Args:
+            time: firing time in simulation **minutes**.
+            kind: event type; its integer value is the equal-time tie-break
+                rank (see the module docstring).
+            payload: opaque data handed back on :meth:`pop`; never compared.
+        """
         heapq.heappush(self._heap, (time, int(kind), next(self._seq), payload))
 
     def pop(self) -> Event:
+        """Remove and return the earliest event (by time, then kind, then
+        insertion order). Raises ``IndexError`` when empty."""
         time, kind, _, payload = heapq.heappop(self._heap)
         return Event(time, EventKind(kind), payload)
 
     def peek_key(self) -> Optional[Tuple[float, int]]:
-        """(time, kind) of the earliest event, or None when empty."""
+        """``(time_minutes, kind_rank)`` of the earliest event, or ``None``
+        when empty — the comparison key the fleet engine merges the sorted
+        arrival stream against."""
         if not self._heap:
             return None
         return (self._heap[0][0], self._heap[0][1])

@@ -21,9 +21,20 @@ live in:
     least-loaded *including queue depth*; round-robin and plain least-loaded
     are available as controls;
   * **pluggable pre-warm policies** (:mod:`repro.core.keepalive`) — fixed
-    keep-alive (paper §4.5), histogram-adaptive keep-alive, and SPES-style
-    predictive pre-warming, comparable under identical placement. Policies see
-    completion events (``on_completion``), not just arrivals.
+    keep-alive (paper §4.5), histogram-adaptive keep-alive, SPES-style
+    predictive pre-warming, and byte-minute-budgeted keep-alive, comparable
+    under identical placement. Policies see completion events
+    (``on_completion``) and the bytes an idle instance pins, not just
+    arrival times;
+  * **page-granular cold starts** (``FleetConfig.page_cost``,
+    :mod:`repro.core.costmodel`) — cold latency = scalar base + blocking page
+    transfer, priced by image pages, link bandwidth, the BULK fault/stream
+    mix, and which tier serves the pages: the worker's own pool, a peer
+    worker via the **cluster-shared image cache**
+    (:class:`repro.core.pool.ClusterImageCache` — each image is fetched from
+    source once, then shared fleet-wide), or the source store. Placement
+    ranks workers by that transfer cost (``place_invocation(start_cost=...)``).
+    The full contract lives in docs/SIMULATION.md.
 
 The engine is a discrete-event simulation (``core/events.py``): one heap of
 typed events (instance-free, pre-warm spawn, keep-alive expiry) merged against
@@ -50,9 +61,10 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.costmodel import PageCostModel
 from repro.core.events import EventKind, EventQueue
 from repro.core.keepalive import PREWARM_POLICIES, PrewarmPolicy
-from repro.core.pool import CapacityLedger
+from repro.core.pool import CapacityLedger, ClusterImageCache
 from repro.core.simulator import (CostModel, latency_percentiles,
                                   method_cold_latency_s)
 from repro.core.traces import Trace
@@ -60,6 +72,18 @@ from repro.core.traces import Trace
 
 @dataclass
 class FleetConfig:
+    """Fleet-simulation knobs (times in minutes, sizes in bytes).
+
+    ``page_cost`` switches the engine from scalar cold-start pricing to the
+    page-granular model: cold latency becomes a function of image pages, link
+    bandwidth, the BULK fault/stream mix, and where the pages come from — the
+    worker's own pool (local), a peer worker via the cluster-shared image
+    cache (remote), or the source store (miss). ``shared_cache_bytes`` bounds
+    that cluster tier; it requires ``page_cost``.
+    ``PageCostModel.degenerate(cost)`` (zero per-request latency, infinite
+    bandwidth) reproduces the scalar engine's numbers exactly in the
+    degenerate configuration — see docs/SIMULATION.md.
+    """
     n_workers: int = 1
     placement: str = "affinity"            # 'affinity' | 'least_loaded' | 'round_robin'
     max_instances_per_fn: Optional[int] = None   # None = unbounded concurrency.
@@ -72,6 +96,11 @@ class FleetConfig:
     worker_capacity_bytes: Optional[int] = None  # per-worker pool capacity
     prewarm: Union[str, PrewarmPolicy] = "none"  # policy name or ready instance
     keep_alive_min: float = 15.0                 # window for the 'none' policy
+    page_cost: Optional[PageCostModel] = None    # page-granular cold pricing
+    shared_cache_bytes: Optional[int] = None     # cluster-shared image tier
+                                                 # capacity (distinct images);
+                                                 # None = unbounded; needs
+                                                 # page_cost
 
 
 @dataclass
@@ -114,6 +143,9 @@ class _Worker:
 
 @dataclass
 class FleetResult:
+    """One ``simulate_fleet`` run's outputs. Units: latencies/waits in
+    seconds, memory in bytes, residency in instance-minutes, migration
+    volume in pages; per-field semantics in the inline comments."""
     method: str
     n_invocations: int
     n_cold: int
@@ -137,6 +169,17 @@ class FleetResult:
     n_queued: int = 0                    # requests that waited for an instance
     queue_delay_s: float = 0.0           # total time requests spent queued
     horizon_min: float = 0.0             # last arrival time (residency clamp)
+    cache_local_hits: int = 0            # page-model cold starts served from
+                                         #   the worker's own pool (memcpy)
+    cache_remote_hits: int = 0           # ... from a peer worker's pool (DCN)
+    cache_misses: int = 0                # ... from the source store (fetched
+                                         #   once into the shared tier)
+    shared_cache_peak_bytes: int = 0     # distinct-image bytes in the cluster
+                                         #   tier, high-water mark
+    shared_cache_evictions: int = 0      # cluster-wide capacity evictions
+    pages_transferred: int = 0           # pages moved over the NETWORK (remote
+                                         #   + source links; local memcpy not
+                                         #   counted) by page-model cold starts
     latency_samples_s: np.ndarray = field(
         default_factory=lambda: np.empty(0))   # per request, merged-arrival order
     queue_wait_s: np.ndarray = field(
@@ -173,21 +216,70 @@ def simulate_fleet(
     cost: CostModel,
     fleet: Optional[FleetConfig] = None,
 ) -> FleetResult:
+    """Discrete-event fleet simulation (see the module docstring).
+
+    Args:
+        traces: per-function arrival traces (times in minutes).
+        method: ``'warmswap' | 'prebaking' | 'baseline'``.
+        cost: scalar cost model (latencies in seconds, sizes in bytes).
+        fleet: :class:`FleetConfig`; ``fleet.page_cost`` switches cold starts
+            to the page-granular model with a cluster-shared image cache.
+
+    Returns:
+        A :class:`FleetResult`: counts, latency samples (seconds),
+        peak resident memory (bytes), queueing/placement/pool stats, and —
+        under the page model — shared-cache hit tiers and network page volume.
+    """
     fleet = fleet if fleet is not None else FleetConfig()
     if fleet.n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {fleet.n_workers}")
     if fleet.placement not in ("affinity", "least_loaded", "round_robin"):
         raise ValueError(f"unknown placement: {fleet.placement!r}")
+    if fleet.shared_cache_bytes is not None and fleet.page_cost is None:
+        raise ValueError("shared_cache_bytes bounds the page-model cluster "
+                         "tier; set FleetConfig.page_cost to enable it")
     # deferred: repro.serving pulls in the model/engine stack, which a
     # simulation-only import of repro.core should not pay for
     from repro.serving.scheduler import place_invocation
     policy = _make_policy(fleet)
     cold_base = method_cold_latency_s(cost, method)
+    page = fleet.page_cost
+    # bytes an IDLE instance of this method pins — what byte-aware keep-alive
+    # policies reason about: warmswap idles on per-fn metadata only (the
+    # image is shared), prebaking on its private snapshot, baseline on its
+    # privately initialized dependencies
+    idle_bytes = {"warmswap": cost.metadata_bytes,
+                  "prebaking": cost.snapshot_bytes,
+                  "baseline": cost.image_bytes}[method]
     cap = fleet.max_instances_per_fn
     workers = [_Worker(i, fleet.worker_capacity_bytes)
                for i in range(fleet.n_workers)]
     fn_image = {t.fn_index: t.image_id for t in traces}
     images = sorted({t.image_id for t in traces})
+
+    # Cluster-shared image tier (page model only): one ledger of distinct
+    # resident images + who holds them. A cluster-capacity eviction drops the
+    # image from every worker pool (the tier IS the union of worker pools).
+    def _cluster_evict(key: str) -> None:
+        for w in workers:
+            w.ledger.evict(key)
+    cluster = (ClusterImageCache(fleet.shared_cache_bytes,
+                                 on_evict=_cluster_evict)
+               if page is not None else None)
+
+    def resident_bytes_of(key: str) -> int:
+        return cost.snapshot_bytes if key.startswith("snap:") else cost.image_bytes
+
+    def admit_resident(w: _Worker, key: str, t: float) -> None:
+        """Admit ``key`` into ``w``'s pool AND the cluster tier, propagating
+        any LRU evictions the worker pool makes to the cluster holder sets."""
+        nbytes = resident_bytes_of(key)
+        for victim in w.ledger.admit(key, nbytes, now=t):
+            if cluster is not None:
+                cluster.worker_evicted(w.idx, victim)
+        if cluster is not None:
+            cluster.admit(key, nbytes, w.idx, now=t)
+            cluster.touch(key, t)
 
     res = FleetResult(method=method, n_invocations=0, n_cold=0, n_warm=0,
                       total_latency_s=0.0, memory_bytes=0,
@@ -218,14 +310,14 @@ def simulate_fleet(
     if method == "warmswap":
         for rank, img in enumerate(images):
             home = workers[rank % len(workers)]
-            home.ledger.admit(f"img:{img}", cost.image_bytes, now=0.0)
+            admit_resident(home, f"img:{img}", 0.0)
         for fn, img in fn_image.items():
             home = workers[images.index(img) % len(workers)]
             home.metadata_fns.add(fn)
     elif method == "prebaking":
         for fn, img in fn_image.items():
             home = workers[images.index(img) % len(workers)]
-            home.ledger.admit(f"snap:{fn}", cost.snapshot_bytes, now=0.0)
+            admit_resident(home, f"snap:{fn}", 0.0)
     note_peak()
 
     # ------------------------------------------------------------- arrival stream
@@ -246,6 +338,23 @@ def simulate_fleet(
     arrival_seq = 0                    # round-robin rotates per ARRIVAL; queued
                                        #   requests must not stall the rotation
 
+    def tier_of(w: _Worker, key: str) -> str:
+        """Where ``key``'s pages would come from for a cold start on ``w``
+        (page model): this worker's pool, a peer via the shared tier, or the
+        source store. Pure read — no hit/miss counters move. The worker
+        ledger is consulted first: an image the bounded shared tier rejected
+        (oversized) can still be resident locally."""
+        if w.ledger.holds(key):
+            return "local"
+        return cluster.classify(key, w.idx)
+
+    def start_cost_s(w: _Worker, key: str) -> float:
+        """Placement's bandwidth-aware estimate: blocking transfer seconds a
+        cold start of this image would pay on ``w`` (the scalar base is the
+        same everywhere, so only the transfer term ranks workers)."""
+        return page.transfer_blocking_s(tier_of(w, key),
+                                        image_bytes=resident_bytes_of(key))
+
     def pick_worker(fn: int, t: float) -> _Worker:
         key = resident_key(fn)
         if fleet.placement == "round_robin":
@@ -253,6 +362,17 @@ def simulate_fleet(
         elif fleet.placement == "least_loaded":
             w = place_invocation(workers, load=lambda w: w.load(t),
                                  queue_depth=_Worker.queue_depth)
+        elif page is not None and method != "baseline":
+            # bandwidth/residency-aware affinity: warm instance first, then
+            # the worker with the cheapest estimated page transfer (local
+            # beats remote beats source-miss; equal tiers fall back to load)
+            w = place_invocation(
+                workers,
+                load=lambda w: w.load(t),
+                queue_depth=_Worker.queue_depth,
+                has_warm=lambda w: w.idle_instance(fn, t) is not None,
+                start_cost=lambda w: start_cost_s(w, key),
+            )
         else:                          # affinity
             w = place_invocation(
                 workers,
@@ -268,25 +388,75 @@ def simulate_fleet(
         return w
 
     def cold_start(w: _Worker, fn: int, t: float) -> float:
-        """Admit what the cold start needs into the worker pool; return latency."""
+        """Admit what the cold start needs into the worker pool (and, under
+        the page model, the cluster-shared tier); return its latency in
+        seconds."""
         key = resident_key(fn)
-        lat = cold_base
-        if method == "warmswap":
-            if not w.ledger.holds(key):
-                lat += cost.image_revive_s        # disk-tier revive / rebuild
-                res.pool_misses += 1
-            w.ledger.admit(key, cost.image_bytes, now=t)
-            if fn not in w.metadata_fns:
-                w.metadata_fns.add(fn)
-        elif method == "prebaking":
-            if not w.ledger.holds(key):
-                # snapshot was evicted: fall back to a from-scratch start and
-                # re-snapshot the result
-                lat = method_cold_latency_s(cost, "baseline")
-                res.pool_misses += 1
-            w.ledger.admit(key, cost.snapshot_bytes, now=t)
+        if page is not None:
+            lat = cold_start_paged(w, fn, key, t)
+        else:
+            lat = cold_base
+            if method == "warmswap":
+                if not w.ledger.holds(key):
+                    lat += cost.image_revive_s    # disk-tier revive / rebuild
+                    res.pool_misses += 1
+                w.ledger.admit(key, cost.image_bytes, now=t)
+                if fn not in w.metadata_fns:
+                    w.metadata_fns.add(fn)
+            elif method == "prebaking":
+                if not w.ledger.holds(key):
+                    # snapshot was evicted: fall back to a from-scratch start
+                    # and re-snapshot the result
+                    lat = method_cold_latency_s(cost, "baseline")
+                    res.pool_misses += 1
+                w.ledger.admit(key, cost.snapshot_bytes, now=t)
         w.ledger.touch(key, t)
+        if cluster is not None:
+            cluster.touch(key, t)
         note_peak()
+        return lat
+
+    def cold_start_paged(w: _Worker, fn: int, key: str, t: float) -> float:
+        """Page-granular cold start: latency = scalar base + blocking page
+        transfer from wherever the image's pages are (worker pool / peer via
+        the cluster-shared cache / source store). The fetched image becomes
+        resident on ``w`` and in the shared tier, so the cluster pays each
+        source fetch once. Network page volume (remote + source tiers) is
+        accounted in ``pages_transferred``."""
+        if method == "baseline":
+            # nothing is ever cached: the full payload streams from source
+            res.pages_transferred += page.image_pages()
+            return page.cold_latency_s("baseline")
+        # classify via the worker ledger first: an image the bounded shared
+        # tier rejected (oversized) can still be resident locally
+        tier = tier_of(w, key)
+        cluster.count(tier)
+        if tier == "local":
+            res.cache_local_hits += 1
+        elif tier == "remote":
+            res.cache_remote_hits += 1
+            res.pool_misses += 1
+        else:
+            res.cache_misses += 1
+            res.pool_misses += 1
+        if method == "warmswap":
+            lat = page.cold_latency_s("warmswap", tier=tier)
+            if tier != "local":
+                res.pages_transferred += page.image_pages()
+        else:                          # prebaking
+            if tier == "miss":
+                # no pool anywhere holds this function's snapshot: rebuild
+                # from scratch (priced as a baseline start) and re-snapshot
+                lat = page.cold_latency_s("baseline")
+                res.pages_transferred += page.image_pages()
+            else:
+                lat = page.cold_latency_s(
+                    "prebaking", tier=tier, image_bytes=cost.snapshot_bytes)
+                if tier != "local":
+                    res.pages_transferred += page.n_pages(cost.snapshot_bytes)
+        admit_resident(w, key, t)
+        if method == "warmswap" and fn not in w.metadata_fns:
+            w.metadata_fns.add(fn)
         return lat
 
     def begin_service(w: _Worker, inst: _Instance, start: float, svc_s: float,
@@ -296,7 +466,8 @@ def simulate_fleet(
         wait_s = (start - req_t) * 60.0
         lat = wait_s + svc_s
         inst.busy_until = start + svc_s / 60.0
-        inst.expires = inst.busy_until + policy.keep_alive_min(inst.fn)
+        inst.expires = inst.busy_until + policy.keep_alive_min(
+            inst.fn, image_bytes=idle_bytes)
         inst.gen += 1
         events.push(inst.busy_until, EventKind.INSTANCE_FREE, (w, inst))
         events.push(inst.expires, EventKind.KEEPALIVE_EXPIRY,
@@ -330,12 +501,16 @@ def simulate_fleet(
             if w.alive(fn):
                 return                 # something is already warm; don't double-spawn
         key = resident_key(fn)
-        w = place_invocation(workers, load=lambda w: w.load(t),
-                             queue_depth=_Worker.queue_depth,
-                             holds_image=lambda w: w.ledger.holds(key))
+        if page is not None and method != "baseline":
+            w = place_invocation(workers, load=lambda w: w.load(t),
+                                 queue_depth=_Worker.queue_depth,
+                                 start_cost=lambda w: start_cost_s(w, key))
+        else:
+            w = place_invocation(workers, load=lambda w: w.load(t),
+                                 queue_depth=_Worker.queue_depth,
+                                 holds_image=lambda w: w.ledger.holds(key))
         if method != "baseline":
-            nbytes = cost.image_bytes if method == "warmswap" else cost.snapshot_bytes
-            w.ledger.admit(key, nbytes, now=t)
+            admit_resident(w, key, t)
             if method == "warmswap":
                 w.metadata_fns.add(fn)
             note_peak()
@@ -413,6 +588,9 @@ def simulate_fleet(
     res.sample_fn = all_fn
     res.evictions = sum(w.ledger.evictions for w in workers)
     res.instance_resident_min = sum(w.instance_min for w in workers)
+    if cluster is not None:
+        res.shared_cache_peak_bytes = cluster.peak_bytes
+        res.shared_cache_evictions = cluster.evictions
     res.per_worker = [{
         "worker": w.idx,
         "served": w.n_served,

@@ -64,10 +64,18 @@ class LiveDependencyImage:
     # -- sizes -------------------------------------------------------------------
     @property
     def image_bytes(self) -> int:
+        """Page-store size in bytes (what the pool's CapacityLedger accounts)."""
         return int(self.store.nbytes)
 
     @property
+    def n_pages(self) -> int:
+        """Pages in the store — the unit the page-granular cost model
+        (``core/costmodel.py``) prices migration in."""
+        return int(self.metadata.page_table.n_pages)
+
+    @property
     def metadata_bytes(self) -> int:
+        """Serialized-metadata size in bytes (the 'communication' payload)."""
         return self.metadata.nbytes()
 
     # -- materialization ----------------------------------------------------------

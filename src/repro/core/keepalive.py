@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -52,7 +53,11 @@ class KeepAlivePolicy:
 # Pluggable pre-warm policies for the fleet simulator (core/fleet.py).
 #
 # A policy answers two questions per function, from its observed arrival history:
-#   * keep_alive_min(fn)  — how long an idle instance stays warm after completion;
+#   * keep_alive_min(fn, image_bytes=...) — how long an idle instance stays warm
+#     after completion. The engine passes the BYTES the idle instance pins
+#     (warmswap: per-fn metadata; prebaking: its private snapshot; baseline: its
+#     privately initialized dependencies), so policies can reason about memory
+#     cost, not just time — see BytesAwareKeepAlive;
 #   * prewarm_after(fn,t) — optionally, a (spawn_at, expire_at) window in which a
 #     predictively pre-warmed instance should be standing by for the next arrival.
 # The fleet engine also feeds completion events (on_completion) so policies can
@@ -89,7 +94,17 @@ class PrewarmPolicy:
         built-in policies are arrival-driven and don't consult it."""
         self._last_completion[fn] = t_min
 
-    def keep_alive_min(self, fn: int) -> float:
+    def keep_alive_min(self, fn: int,
+                       image_bytes: Optional[int] = None) -> float:
+        """Keep-alive window (minutes) for an idle instance of ``fn``.
+
+        Args:
+            fn: function index.
+            image_bytes: bytes the idle instance pins in memory (``None``
+                when the caller has no size information). The base policy and
+                the time-only subclasses ignore it; byte-aware policies scale
+                the window by it.
+        """
         return self._keep_alive_min
 
     def prewarm_after(self, fn: int, t_min: float):
@@ -115,7 +130,8 @@ class HistogramKeepAlive(PrewarmPolicy):
         self.hi_min = hi_min
         self.min_samples = min_samples
 
-    def keep_alive_min(self, fn: int) -> float:
+    def keep_alive_min(self, fn: int,
+                       image_bytes: Optional[int] = None) -> float:
         hist = self._iats.get(fn, ())
         if len(hist) < self.min_samples:
             return self._keep_alive_min
@@ -150,8 +166,45 @@ class SpesPrewarm(PrewarmPolicy):
         return (t_min + med - margin, t_min + med + margin)
 
 
+class BytesAwareKeepAlive(PrewarmPolicy):
+    """Keep-alive priced in byte-minutes, not minutes.
+
+    A fixed time window treats a 3 MB idle handler and a 2.3 GB idle snapshot
+    as equally cheap; a provider's cache does not. This policy grants every
+    idle instance the same *byte-minute* budget, so the window scales
+    inversely with the bytes the instance pins: tiny WarmSwap metadata idles
+    for a long time (the shared image is already paid for), a private
+    Prebaking snapshot gets a short leash. With the default budget a 230 MB
+    resident gets exactly the paper's 15-minute window.
+
+    Args:
+        budget_byte_min: byte-minutes one idle instance may consume
+            (default: 230 MiB x 15 min).
+        lo_min / hi_min: clamp on the resulting window (minutes).
+        default_min: window when the caller passes no size (minutes).
+    """
+
+    name = "bytes"
+
+    def __init__(self, budget_byte_min: float = float(230 << 20) * 15.0,
+                 lo_min: float = 1.0, hi_min: float = 240.0,
+                 default_min: float = 15.0):
+        super().__init__(keep_alive_min=default_min)
+        self.budget_byte_min = budget_byte_min
+        self.lo_min = lo_min
+        self.hi_min = hi_min
+
+    def keep_alive_min(self, fn: int,
+                       image_bytes: Optional[int] = None) -> float:
+        if not image_bytes or image_bytes <= 0:
+            return self._keep_alive_min
+        return min(max(self.budget_byte_min / image_bytes, self.lo_min),
+                   self.hi_min)
+
+
 PREWARM_POLICIES = {
     "none": PrewarmPolicy,
     "histogram": HistogramKeepAlive,
     "spes": SpesPrewarm,
+    "bytes": BytesAwareKeepAlive,
 }

@@ -40,11 +40,21 @@ class RestorePolicy(enum.Enum):
 
 @dataclass
 class LinkModel:
-    """Transport between the pool and a function container."""
-    latency_s: float = 0.0          # per page-server request
-    bandwidth_bps: Optional[float] = None  # None = host memcpy speed (local pool)
+    """Transport between a page source and a function container.
+
+    Used twice: by the *measured* migration path (``PageServer`` sleeps to
+    extend real copies to the modelled speed) and by the *simulated*
+    page-granular cost model (``core/costmodel.py``), so measured and
+    simulated transfers share one parameterization.
+    """
+    latency_s: float = 0.0          # seconds per page-server request (RTT)
+    bandwidth_bps: Optional[float] = None  # bytes/second; None = infinite
+                                           #   (host memcpy, local pool)
 
     def delay_for(self, nbytes: int) -> float:
+        """Seconds one request moving ``nbytes`` bytes takes on this link:
+        ``latency_s`` + ``nbytes / bandwidth_bps`` (no bandwidth term when
+        ``bandwidth_bps`` is ``None``)."""
         d = self.latency_s
         if self.bandwidth_bps:
             d += nbytes / self.bandwidth_bps
@@ -76,7 +86,17 @@ class PageServer:
         return self._image.metadata.page_table
 
     def fetch_pages(self, first_page: int, n_pages: int) -> np.ndarray:
-        """Copy a page span out of the pool (the unit of transfer)."""
+        """Copy a page span out of the pool (the unit of transfer).
+
+        Args:
+            first_page: index of the first page in the image's store.
+            n_pages: pages to copy.
+
+        Returns:
+            ``(n_pages, page_size)`` uint8 array — a real copy, delayed by
+            the link model when one is configured. Stats (requests, pages,
+            bytes) are updated under the server lock.
+        """
         delay = self._link.delay_for(n_pages * self.table.page_size)
         if delay > 0:
             time.sleep(delay)
@@ -196,7 +216,17 @@ class RestoredImage:
 
     # -- the fault path ------------------------------------------------------------
     def fault(self, key: str) -> np.ndarray:
-        """First touch of a leaf by the executing function (userfaultfd analogue)."""
+        """First touch of a leaf by the executing function (userfaultfd
+        analogue).
+
+        Args:
+            key: leaf path in the image's page table.
+
+        Returns:
+            The materialized leaf array. Blocking time is accounted in
+            ``stats.fault_wait_s`` (seconds); under ``BULK`` the first fault
+            also kicks off the background stream for the remaining leaves.
+        """
         if self._events[key].is_set() and key in self._local:
             return self._local[key]
         self.stats.faults += 1
@@ -214,6 +244,9 @@ class RestoredImage:
         return self._local[key]
 
     def wait_all(self) -> None:
+        """Block until every leaf of the image is resident container-side
+        (policy-appropriately: join the BULK stream and retry dead leaves,
+        fault everything under LAZY, no-op for the eager policies)."""
         if self.policy == RestorePolicy.BULK:
             self._start_background_stream()
             if self._stream_thread is not None:
@@ -230,6 +263,8 @@ class RestoredImage:
         # NO_LAZY / NO_PAGESERVER are already resident
 
     def resident_fraction(self) -> float:
+        """Fraction of leaves materialized container-side, in [0, 1] — the
+        measured counterpart of the cost model's ``resident_pages`` knob."""
         return len(self._local) / max(len(self._events), 1)
 
     def as_pytree(self) -> Any:

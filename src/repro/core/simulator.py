@@ -31,7 +31,15 @@ from repro.core.traces import Trace, quartile_groups
 
 @dataclass
 class CostModel:
-    """Per-method start latencies (seconds) and memory shapes."""
+    """Per-method start latencies (seconds) and memory shapes (bytes).
+
+    This is the *scalar* model: one constant cold-start latency per method.
+    ``core/costmodel.PageCostModel`` wraps it to price cold starts by page
+    transfer volume instead; there the ``cold_*_s`` values are read as the
+    zero-transfer base (boot + init compute + handler) and the page-transfer
+    term is added on top. Under ``PageCostModel.degenerate`` the two models
+    agree exactly (see docs/SIMULATION.md).
+    """
     cold_warmswap_s: float
     cold_prebaking_s: float
     cold_baseline_s: float
@@ -52,7 +60,18 @@ class CostModel:
 
 
 def method_cold_latency_s(cost: CostModel, method: str) -> float:
-    """Cold-start latency for a method, pool hit assumed (shared with fleet.py)."""
+    """Scalar cold-start latency (seconds) for ``method``, pool hit assumed.
+
+    Args:
+        cost: the scalar cost model.
+        method: ``'warmswap' | 'prebaking' | 'baseline'``.
+
+    Returns:
+        Per-method cold latency including the flat container overhead.
+        Shared by ``simulate()`` and ``fleet.simulate_fleet()``; the
+        page-granular model (``costmodel.PageCostModel``) uses it as the
+        zero-transfer base.
+    """
     return {
         "warmswap": cost.cold_warmswap_s + cost.container_s,
         "prebaking": cost.cold_prebaking_s + cost.container_s,
@@ -62,8 +81,20 @@ def method_cold_latency_s(cost: CostModel, method: str) -> float:
 
 def method_memory_bytes(cost: CostModel, method: str, n_functions: int,
                         shared_images: int = 1) -> int:
-    """Single-worker resident-memory model: WarmSwap = shared images + per-fn
-    metadata; Prebaking = one snapshot per function; Baseline = nothing."""
+    """Single-worker resident-memory model (bytes).
+
+    Args:
+        cost: the scalar cost model (``image_bytes`` / ``metadata_bytes`` /
+            ``snapshot_bytes``).
+        method: ``'warmswap' | 'prebaking' | 'baseline'``.
+        n_functions: functions served by this worker.
+        shared_images: distinct dependency images across those functions.
+
+    Returns:
+        WarmSwap = shared images + per-function metadata (O(#images));
+        Prebaking = one full snapshot per function (O(#functions));
+        Baseline = nothing resident.
+    """
     return {
         "warmswap": shared_images * cost.image_bytes
                     + n_functions * cost.metadata_bytes,
@@ -84,6 +115,8 @@ def latency_percentiles(samples: np.ndarray) -> Dict[str, float]:
 
 @dataclass
 class SimResult:
+    """One ``simulate()`` run's outputs (latencies in seconds, memory in
+    bytes; ``latency_samples_s`` is per request, in per-trace order)."""
     method: str
     n_invocations: int
     n_cold: int
@@ -169,9 +202,32 @@ def simulate(
     cost: CostModel,
     keep_alive: Optional[KeepAlivePolicy] = None,
     shared_images: int = 1,            # distinct dependency images across the fleet
+    page_cost: Optional["PageCostModel"] = None,  # page-granular cold pricing
 ) -> SimResult:
+    """Single-worker, queue-accurate trace simulation (paper Fig. 7).
+
+    Args:
+        traces: per-function arrival traces (times in minutes).
+        method: ``'warmswap' | 'prebaking' | 'baseline'``.
+        cost: scalar cost model (latencies in seconds, sizes in bytes).
+        keep_alive: fixed keep-alive window (minutes); default 15 (paper §4.5).
+        shared_images: distinct dependency images, for the memory model.
+        page_cost: optional :class:`~repro.core.costmodel.PageCostModel`.
+            When given, each cold start is priced page-granularly at the
+            ``local`` tier (the single worker's pool always holds the image,
+            so pages move at host-memcpy speed; the container starts with
+            zero resident pages). ``PageCostModel.degenerate(cost)``
+            reproduces the default scalar results exactly.
+
+    Returns:
+        A :class:`SimResult` with counts, total/per-function latency
+        (seconds), static per-method memory (bytes), queueing stats, and
+        per-request latency samples.
+    """
     keep_alive = keep_alive if keep_alive is not None else KeepAlivePolicy(15.0)
-    cold_latency = method_cold_latency_s(cost, method)
+    cold_latency = (page_cost.cold_latency_s(method, tier="local")
+                    if page_cost is not None
+                    else method_cold_latency_s(cost, method))
 
     n_cold = n_warm = n_queued = 0
     total = queue_delay = 0.0

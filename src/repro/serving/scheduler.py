@@ -31,16 +31,38 @@ def place_invocation(
     has_warm: Optional[Callable] = None,
     holds_image: Optional[Callable] = None,
     queue_depth: Optional[Callable] = None,
+    start_cost: Optional[Callable] = None,
 ):
     """Image-affinity placement over ``workers`` (any hashable ids).
 
     Priority: (1) a worker with a warm idle instance of the function,
-    (2) a worker whose pool already holds the live dependency image,
-    (3) the least-loaded worker. ``queue_depth`` (requests waiting for an
-    instance, not yet running) adds to the load — a worker with a deep queue
-    is as bad as one with that many in-flight requests. Ties break on position
-    in ``workers``, so placement is deterministic and worker ids never need to
-    be orderable."""
+    (2a) with ``start_cost`` — the worker with the cheapest estimated
+    cold-start transfer (seconds: 0-ish where the image is hot in the local
+    pool, a network transfer where a peer holds it, a source fetch where
+    nobody does — the bandwidth/residency-aware ranking the page-granular
+    cost model feeds), ties broken by load;
+    (2b) without it — a worker whose pool already holds the live dependency
+    image (the boolean residency special case);
+    (3) the least-loaded worker.
+
+    ``queue_depth`` (requests waiting for an instance, not yet running) adds
+    to the load — a worker with a deep queue is as bad as one with that many
+    in-flight requests. Ties break on position in ``workers``, so placement
+    is deterministic and worker ids never need to be orderable.
+
+    Args:
+        workers: candidate workers (any hashable ids).
+        load: ``worker -> int`` in-flight request count.
+        has_warm: optional ``worker -> bool``, an idle warm instance exists.
+        holds_image: optional ``worker -> bool``, pool holds the live image.
+        queue_depth: optional ``worker -> int``, queued-but-not-running count.
+        start_cost: optional ``worker -> float`` estimated cold-start
+            transfer seconds on that worker; overrides ``holds_image`` when
+            provided.
+
+    Returns:
+        The chosen worker, or ``None`` when ``workers`` is empty.
+    """
     if not workers:
         return None
     rank = {w: i for i, w in enumerate(workers)}
@@ -52,6 +74,8 @@ def place_invocation(
         warm = [w for w in workers if has_warm(w)]
         if warm:
             return min(warm, key=key)
+    if start_cost is not None:
+        return min(workers, key=lambda w: (start_cost(w),) + key(w))
     if holds_image is not None:
         holding = [w for w in workers if holds_image(w)]
         if holding:

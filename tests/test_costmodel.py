@@ -1,0 +1,337 @@
+"""Page-granular cost model (core/costmodel.py) + cluster-shared image cache:
+edge cases, the degenerate scalar-equivalence contract (incl. the 88 %
+headline), tier ordering properties, fetch-once semantics, bandwidth-aware
+placement, and byte-aware keep-alive."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import PageCostModel
+from repro.core.fleet import FleetConfig, simulate_fleet
+from repro.core.keepalive import BytesAwareKeepAlive, KeepAlivePolicy
+from repro.core.migration import LinkModel
+from repro.core.pool import ClusterImageCache
+from repro.core.simulator import (CostModel, memory_saving_fraction,
+                                  method_cold_latency_s, simulate)
+from repro.core.traces import Trace, generate_fleet_traces, generate_traces
+from repro.serving.scheduler import place_invocation
+
+CM = CostModel.paper_table2()
+MODEL = PageCostModel(cost=CM)
+DEG = PageCostModel.degenerate(CM)
+
+
+def _trace(fn, arrivals, image=0):
+    arr = np.asarray(arrivals, np.float64)
+    rate = len(arr) / max(float(arr[-1]) if len(arr) else 1.0, 1.0)
+    return Trace(fn, rate, arr, image_id=image)
+
+
+# ---------------------------------------------------------------------------------
+# Cost-model edge cases
+# ---------------------------------------------------------------------------------
+
+def test_zero_resident_pages_is_pure_cold():
+    """Nothing resident: the full image moves, and the latency decomposes as
+    scalar base + blocking transfer of every page."""
+    total = MODEL.image_pages()
+    lat = MODEL.cold_latency_s("warmswap", tier="remote", resident_pages=0)
+    base = method_cold_latency_s(CM, "warmswap")
+    assert lat == pytest.approx(base + MODEL.blocking_s(total, MODEL.remote))
+    assert MODEL.blocking_s(total, MODEL.remote) > 0
+
+
+def test_fully_resident_image_is_pure_warm_transfer():
+    """Every page already resident: the transfer term vanishes exactly and
+    only the scalar base remains — on every tier, even the slow ones."""
+    total = MODEL.image_pages()
+    base = method_cold_latency_s(CM, "warmswap")
+    for tier in ("local", "remote", "miss"):
+        assert MODEL.cold_latency_s("warmswap", tier=tier,
+                                    resident_pages=total) == base
+        assert MODEL.transfer_blocking_s(tier, resident_pages=total) == 0.0
+    # over-reporting residency never goes negative
+    assert MODEL.cold_latency_s("warmswap", resident_pages=10 * total) == base
+
+
+def test_degenerate_model_equals_scalar_costs_all_methods():
+    """Infinite bandwidth + zero per-request latency: the page model IS the
+    scalar model, for every method, tier, and residency."""
+    for method in ("warmswap", "prebaking", "baseline"):
+        scalar = method_cold_latency_s(CM, method)
+        for tier in ("local", "remote", "miss"):
+            for resident in (0, 7, 10_000):
+                assert DEG.cold_latency_s(method, tier=tier,
+                                          resident_pages=resident) == scalar
+
+
+def test_remote_vs_local_latency_ordering():
+    """A remote shared-cache hit costs at least a local pool hit and at most
+    a source miss — strictly, whenever pages actually move over finite
+    bandwidth."""
+    for resident in (0, MODEL.image_pages() // 2):
+        local = MODEL.cold_latency_s("warmswap", "local", resident)
+        remote = MODEL.cold_latency_s("warmswap", "remote", resident)
+        miss = MODEL.cold_latency_s("warmswap", "miss", resident)
+        assert local < remote < miss
+    # ...and degenerately the ordering collapses to equality
+    assert (DEG.cold_latency_s("warmswap", "local")
+            == DEG.cold_latency_s("warmswap", "remote")
+            == DEG.cold_latency_s("warmswap", "miss"))
+
+
+@given(st.integers(1, 4000), st.integers(0, 4000))
+@settings(max_examples=50, deadline=None)
+def test_latency_monotone_in_residency_and_size(pages, resident):
+    """More resident pages never cost more; bigger images never cost less."""
+    nbytes = pages * MODEL.page_size
+    lat = MODEL.cold_latency_s("warmswap", "remote", resident, nbytes)
+    lat_more = MODEL.cold_latency_s("warmswap", "remote", resident + 1, nbytes)
+    lat_bigger = MODEL.cold_latency_s("warmswap", "remote", resident,
+                                      nbytes + MODEL.page_size)
+    assert lat_more <= lat + 1e-12
+    assert lat_bigger >= lat - 1e-12
+    assert lat >= method_cold_latency_s(CM, "warmswap") - 1e-12
+
+
+def test_hotswap_between_warm_and_cold_across_sizes():
+    """The bench cell's invariant: a shared, half-resident image restored over
+    the network lies strictly between a warm start and a full cold start."""
+    for mb in (16, 64, 230, 1024):
+        nbytes = mb << 20
+        half = MODEL.image_pages(nbytes) // 2
+        hot = MODEL.cold_latency_s("warmswap", "remote", half, nbytes)
+        cold = MODEL.cold_latency_s("baseline", image_bytes=nbytes)
+        assert CM.warm_s < hot < cold
+
+
+def test_dependency_loading_speedup_in_paper_band_at_paper_scale():
+    assert 2.2 <= MODEL.dependency_loading_speedup() <= 3.2
+
+
+def test_invalid_arguments_raise():
+    with pytest.raises(ValueError):
+        MODEL.cold_latency_s("warmswap", tier="nearby")
+    with pytest.raises(ValueError):
+        MODEL.cold_latency_s("snapshotting")
+    with pytest.raises(ValueError):
+        PageCostModel(cost=CM, fault_fraction=1.5)
+    with pytest.raises(ValueError):
+        PageCostModel(cost=CM, stream_overlap=-0.1)
+
+
+# ---------------------------------------------------------------------------------
+# Degenerate equivalence with the scalar engine (acceptance criterion)
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["warmswap", "prebaking", "baseline"])
+def test_degenerate_fleet_reproduces_scalar_simulate_exactly(method):
+    """Degenerate page model + unlimited shared cache, in the degenerate fleet
+    config, reproduces the pre-page-model simulate() numbers exactly."""
+    traces = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1, page_cost=DEG)
+    rf = simulate_fleet(traces, method, CM, cfg)
+    rs = simulate(traces, method, CM, KeepAlivePolicy(15.0))
+    assert (rf.n_cold, rf.n_warm) == (rs.n_cold, rs.n_warm)
+    assert rf.total_latency_s == pytest.approx(rs.total_latency_s, abs=1e-6)
+    assert rf.memory_bytes == rs.memory_bytes
+    # page-aware simulate() agrees too
+    rs_p = simulate(traces, method, CM, KeepAlivePolicy(15.0), page_cost=DEG)
+    assert rs_p.total_latency_s == rs.total_latency_s
+
+
+def test_degenerate_page_model_preserves_88pct_headline():
+    traces = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
+    cfg = FleetConfig(n_workers=1, max_instances_per_fn=1, page_cost=DEG)
+    rw = simulate_fleet(traces, "warmswap", CM, cfg)
+    rp = simulate_fleet(traces, "prebaking", CM, cfg)
+    assert 0.85 < memory_saving_fraction(rw, rp) < 0.92
+
+
+def test_shared_cache_bytes_requires_page_cost():
+    with pytest.raises(ValueError):
+        simulate_fleet([_trace(0, [1.0])], "warmswap", CM,
+                       FleetConfig(shared_cache_bytes=1 << 30))
+
+
+# ---------------------------------------------------------------------------------
+# Cluster-shared image cache
+# ---------------------------------------------------------------------------------
+
+def test_cluster_cache_tiers_and_fetch_once():
+    cache = ClusterImageCache()
+    assert cache.lookup("img:0", 0) == "miss"          # nobody has it yet
+    cache.admit("img:0", 100, worker=0, now=1.0)
+    assert cache.lookup("img:0", 0) == "local"
+    assert cache.lookup("img:0", 1) == "remote"        # peer fetch, not source
+    cache.admit("img:0", 100, worker=1, now=2.0)
+    assert cache.lookup("img:0", 1) == "local"
+    assert cache.used_bytes() == 100                   # distinct images, once
+    assert cache.misses == 1 and cache.remote_hits == 1
+    # classify is a pure read: counters must not move
+    before = (cache.local_hits, cache.remote_hits, cache.misses)
+    assert cache.classify("img:0", 1) == "local"
+    assert cache.classify("img:none", 0) == "miss"
+    assert (cache.local_hits, cache.remote_hits, cache.misses) == before
+
+
+def test_fleet_keeps_cluster_counters_truthful():
+    """The engine classifies tiers itself (worker ledger first) but must keep
+    the ClusterImageCache counters in agreement with FleetResult, via
+    ClusterImageCache.count — summary() must never contradict the result."""
+    cache = ClusterImageCache()
+    for tier in ("local", "remote", "miss", "miss"):
+        cache.count(tier)
+    s = cache.summary()
+    assert (s["local_hits"], s["remote_hits"], s["misses"]) == (1, 1, 2)
+
+
+def test_cluster_cache_last_holder_eviction_drops_image():
+    cache = ClusterImageCache()
+    cache.admit("img:0", 100, worker=0, now=1.0)
+    cache.admit("img:0", 100, worker=1, now=2.0)
+    cache.worker_evicted(0, "img:0")
+    assert cache.holds("img:0")                        # worker 1 still has it
+    cache.worker_evicted(1, "img:0")
+    assert not cache.holds("img:0") and cache.used_bytes() == 0
+    assert cache.evictions == 0                        # not a capacity eviction
+
+
+def test_oversized_image_exceeding_shared_cache_is_rejected():
+    """An image bigger than the whole shared tier can never be resident in
+    it: admits are rejected, every non-local lookup stays a source miss, and
+    smaller images are unaffected."""
+    cache = ClusterImageCache(capacity_bytes=100)
+    cache.admit("img:big", 150, worker=0, now=1.0)
+    assert not cache.holds("img:big") and cache.rejected == 1
+    assert cache.lookup("img:big", 1) == "miss"
+    cache.admit("img:small", 60, worker=0, now=2.0)
+    assert cache.holds("img:small")
+    # fleet-level: a shared tier smaller than one image -> no remote hits
+    # ever; every cross-worker cold start pays the source fetch
+    traces = [_trace(i, [10.0 * (i + 1), 500.0 + 10.0 * i], image=0)
+              for i in range(4)]
+    r = simulate_fleet(traces, "warmswap", CM,
+                       FleetConfig(n_workers=2, placement="round_robin",
+                                   page_cost=MODEL,
+                                   shared_cache_bytes=CM.image_bytes // 2))
+    assert r.cache_remote_hits == 0
+    assert r.cache_misses > 0
+
+
+def test_cluster_capacity_eviction_fires_callback():
+    dropped = []
+    cache = ClusterImageCache(capacity_bytes=100,
+                              on_evict=dropped.append)
+    cache.admit("a", 60, worker=0, now=1.0)
+    cache.admit("b", 60, worker=1, now=2.0)            # evicts LRU 'a'
+    assert dropped == ["a"] and not cache.holds("a")
+    assert cache.evictions == 1 and cache.peak_bytes == 60
+
+
+def test_fleet_shared_cache_second_worker_pays_remote_not_source():
+    """Fetch-once: function 0's image starts on worker 0; a later cold start
+    of a sharing function routed to worker 1 is a remote hit (network
+    transfer), not a second source fetch — and its latency sits strictly
+    between a local hit and a miss."""
+    # two functions share image 0; round-robin forces fn 1 onto worker 1
+    traces = [_trace(0, [10.0], image=0), _trace(1, [11.0], image=0)]
+    r = simulate_fleet(traces, "warmswap", CM,
+                       FleetConfig(n_workers=2, placement="round_robin",
+                                   page_cost=MODEL))
+    assert r.cache_local_hits == 1 and r.cache_remote_hits == 1
+    assert r.cache_misses == 0                         # setup pre-fetched once
+    lats = np.sort(r.latency_samples_s)
+    local = MODEL.cold_latency_s("warmswap", "local")
+    remote = MODEL.cold_latency_s("warmswap", "remote")
+    miss = MODEL.cold_latency_s("warmswap", "miss")
+    assert lats[0] == pytest.approx(local)
+    assert lats[1] == pytest.approx(remote)
+    assert local < remote < miss
+    assert r.pages_transferred == MODEL.image_pages()  # only the remote hit
+
+
+# ---------------------------------------------------------------------------------
+# Bandwidth/residency-aware placement
+# ---------------------------------------------------------------------------------
+
+def test_place_invocation_start_cost_prefers_cheapest_transfer():
+    cost = {0: 0.5, 1: 0.0, 2: 0.2}.__getitem__
+    load = {0: 0, 1: 9, 2: 0}.__getitem__
+    # cheapest transfer wins even against an idle worker...
+    assert place_invocation([0, 1, 2], load=load, start_cost=cost) == 1
+    # ...warm instances still beat everything...
+    assert place_invocation([0, 1, 2], load=load, start_cost=cost,
+                            has_warm=lambda w: w == 0) == 0
+    # ...and equal costs fall back to load, then position
+    flat = lambda w: 0.0  # noqa: E731
+    assert place_invocation([0, 1, 2], load=load, start_cost=flat) == 0
+
+
+def test_paged_affinity_placement_avoids_source_misses():
+    """Bandwidth-aware affinity routes cold starts to workers whose pool (or
+    the shared tier) already has the image, so it moves strictly fewer pages
+    over the network than placement that ignores residency."""
+    traces = generate_fleet_traces(12, horizon_min=24 * 60, seed=1,
+                                   n_images=4, rate_model="zipf",
+                                   total_rate_per_min=4.0)
+    aff = simulate_fleet(traces, "warmswap", CM,
+                         FleetConfig(n_workers=4, page_cost=MODEL,
+                                     worker_capacity_bytes=CM.image_bytes))
+    rr = simulate_fleet(traces, "warmswap", CM,
+                        FleetConfig(n_workers=4, placement="round_robin",
+                                    page_cost=MODEL,
+                                    worker_capacity_bytes=CM.image_bytes))
+    assert aff.pages_transferred < rr.pages_transferred
+    assert aff.n_cold < rr.n_cold
+    assert (aff.cache_remote_hits + aff.cache_misses
+            < rr.cache_remote_hits + rr.cache_misses)
+
+
+# ---------------------------------------------------------------------------------
+# Byte-aware keep-alive
+# ---------------------------------------------------------------------------------
+
+def test_bytes_aware_keepalive_scales_with_image_bytes():
+    pol = BytesAwareKeepAlive()                        # 230 MiB x 15 min budget
+    assert pol.keep_alive_min(0, image_bytes=230 << 20) == pytest.approx(15.0)
+    # tiny warmswap metadata idles far longer than a fat private snapshot
+    assert (pol.keep_alive_min(0, image_bytes=3 << 20)
+            > pol.keep_alive_min(0, image_bytes=2300 << 20))
+    assert pol.keep_alive_min(0, image_bytes=None) == 15.0   # no size info
+    assert pol.keep_alive_min(0, image_bytes=1) == pol.hi_min  # clamped
+
+
+def test_predicted_cold_latency_is_a_pure_read():
+    """Pricing a cold start must never build/revive the image (that would pay
+    and pool-admit the very cost being estimated): with no live image the
+    prediction uses the model's default size and the pool stays empty."""
+    from repro.core.pool import DependencyManager
+    from repro.core.registry import FunctionRegistry
+    from repro.core.coldstart import ColdStartOrchestrator
+    import tempfile
+
+    mgr = DependencyManager()
+    reg = FunctionRegistry(store_dir=tempfile.mkdtemp(prefix="costmodel-t-"))
+    mgr.register_image("img", "arch", lambda: {"w": np.zeros((4,))},
+                       build_now=False)
+    reg.register("fn", "img", lambda: {}, lambda p, h, r, e: 0,
+                 write_baseline_checkpoint=False)
+    orch = ColdStartOrchestrator(mgr, reg)
+    lat = orch.predicted_cold_latency_s("fn", MODEL, tier="remote")
+    assert lat == MODEL.cold_latency_s("warmswap", tier="remote")
+    assert not mgr.has_live("img")                     # nothing materialized
+    assert mgr.live_image_bytes("img") is None
+    assert mgr.stats.builds == 0
+
+
+def test_bytes_policy_keeps_warmswap_warmer_than_prebaking():
+    """Under the byte-minute budget, warmswap's cheap idle metadata earns a
+    long window (fewer cold starts) while prebaking's snapshots get a short
+    leash — the sharing advantage shows up in the keep-alive economics."""
+    traces = [_trace(fn, np.arange(5.0 + fn, 2000.0, 30.0)) for fn in range(4)]
+    ws = simulate_fleet(traces, "warmswap", CM,
+                        FleetConfig(n_workers=2, prewarm="bytes"))
+    pb = simulate_fleet(traces, "prebaking", CM,
+                        FleetConfig(n_workers=2, prewarm="bytes"))
+    assert ws.n_cold < pb.n_cold
