@@ -1,80 +1,44 @@
 """Fleet-scale simulation sweep: workers x pool-capacity x skew x sharing-degree.
 
-Extends bench_sharing (single worker, Fig. 7) into the design space the paper's
-fleet-level claims live in: per-method (WarmSwap / Prebaking / Baseline)
-latency quartiles AND per-request tail percentiles (P50/P95/P99 per
-invocation-rate quartile, from the event engine's latency samples), peak
-resident memory, pool-miss/eviction/queueing behaviour, and the
-pre-warm-policy comparison — all under identical image-affinity placement.
+Every simulation cell here is **driven by a checked-in scenario spec**
+(``benchmarks/scenarios/*.json``) through the experiments CLI's programmatic
+entry points (``repro.experiments.run_file`` / ``sweep_file``) — the bench
+suite, the CLI, and CI all exercise one code path. Sweep axes are dotted
+paths into the spec (``n_workers``, ``traces.kwargs.n_images``,
+``placement.name``), expanded by ``repro.core.scenario.sweep``.
+
+Cells (per method — WarmSwap / Prebaking / Baseline — under identical
+placement): latency quartiles AND per-request tail percentiles (P50/P95/P99
+per invocation-rate quartile, from the event engine's latency samples), peak
+resident memory, pool-miss/eviction/queueing behaviour, the pre-warm-policy
+comparison, and the page-granular cost model + cluster-shared image cache.
 
 Also re-derives Fig. 7 as the degenerate point (1 worker, unlimited capacity,
-one instance per function) and checks it against ``simulator.simulate()``,
-including the ~88 % memory-saving headline at sharing degree 10, and runs a
-capped-concurrency cell where queue delay is visible (P99 > mean).
+one instance per function) and checks it against the legacy
+``simulator.simulate()`` wrapper — including the ~88 % memory-saving headline
+at sharing degree 10 and the paper's 2.2–3.2x dependency-loading band — so
+degenerate equivalence is asserted through the declarative path on every run.
 
-Every cell's latency samples are validated: NaN or negative latencies fail the
-run (the CI smoke job relies on this).
+Every cell's latency samples are validated (``benchmarks/common.py``): NaN or
+negative latencies fail the run (the CI smoke job relies on this).
 
     PYTHONPATH=src python -m benchmarks.run --only fleet [--smoke]
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
-from benchmarks.common import emit, save_json, smoke_mode
+from benchmarks.common import (emit, save_json, scenario_cell, scenario_path,
+                               smoke_mode, validated_samples)
 
 METHODS = ("warmswap", "prebaking", "baseline")
 
 
-def _validated_samples(r, label: str):
-    """NaN / negative per-request latencies are impossible under a correct
-    queueing model — fail loudly rather than report them."""
-    import numpy as np
-
-    s = np.asarray(r.latency_samples_s)
-    if s.size and (not np.isfinite(s).all() or (s < 0).any()):
-        raise RuntimeError(f"fleet/{label}: NaN or negative latency samples")
-    if r.queue_delay_s < 0 or not np.isfinite(r.queue_delay_s):
-        raise RuntimeError(f"fleet/{label}: invalid queue delay "
-                           f"{r.queue_delay_s!r}")
-    return s
-
-
-def _cell(traces, cm, fleet, label: str) -> Dict:
-    from repro.core.fleet import simulate_fleet
-    from repro.core.simulator import quartile_latencies, quartile_percentiles
-
-    out: Dict = {}
-    for method in METHODS:
-        r = simulate_fleet(traces, method, cm, fleet)
-        _validated_samples(r, f"{label}/{method}")
-        pct = r.latency_percentiles()
-        out[method] = {
-            "avg_latency_s": r.avg_latency_s,
-            "latency_percentiles_s": pct,
-            "quartile_latency_s": quartile_latencies(traces, r),
-            "quartile_percentiles_s": quartile_percentiles(traces, r),
-            "peak_memory_mb": r.memory_bytes / 1e6,
-            "cold": r.n_cold, "warm": r.n_warm,
-            "queued": r.n_queued, "queue_delay_s": r.queue_delay_s,
-            "pool_misses": r.pool_misses, "evictions": r.evictions,
-            "max_concurrent_instances": r.max_concurrent_instances,
-            "instance_resident_min": r.instance_resident_min,
-            "prewarm_dropped": r.prewarm_dropped,
-        }
-        emit(f"fleet/{label}/{method}", r.avg_latency_s * 1e6,
-             f"p99={pct['p99'] * 1e3:.1f}ms mem={r.memory_bytes / 1e6:.0f}MB "
-             f"cold={r.n_cold} queued={r.n_queued} "
-             f"miss={r.pool_misses} evict={r.evictions}")
-    return out
-
-
 def run() -> Dict:
-    from repro.core.fleet import FleetConfig, simulate_fleet
     from repro.core.keepalive import KeepAlivePolicy
-    from repro.core.simulator import CostModel, memory_saving_fraction, simulate
-    from repro.core.traces import (generate_fleet_traces, generate_traces,
-                                   sharing_degrees)
+    from repro.core.simulator import CostModel, simulate
+    from repro.core.traces import sharing_degrees
+    from repro.experiments import run_file, sweep_file
 
     cm = CostModel.paper_table2()
     smoke = smoke_mode()
@@ -82,12 +46,12 @@ def run() -> Dict:
 
     # ------------------------------------------------------------- degenerate point
     # 1 worker, unlimited capacity, 1 instance/function == simulate() == Fig. 7.
-    traces10 = generate_traces(10, horizon_min=(1 if smoke else 14) * 24 * 60,
-                               seed=0)
-    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    # The scenario path must agree with the legacy wrapper bit for bit.
+    res = run_file(scenario_path("degenerate"), smoke=smoke)
+    traces10 = res.traces
     degenerate: Dict = {}
     for method in METHODS:
-        rf = simulate_fleet(traces10, method, cm, deg)
+        rf = res.raw[method]
         rs = simulate(traces10, method, cm, KeepAlivePolicy(15.0))
         drift = abs(rf.total_latency_s - rs.total_latency_s)
         degenerate[method] = {
@@ -97,71 +61,59 @@ def run() -> Dict:
             "memory_match": rf.memory_bytes == rs.memory_bytes,
         }
         assert drift < 1e-6 and rf.memory_bytes == rs.memory_bytes, \
-            f"degenerate fleet sim diverged from simulate() for {method}"
-    saving = memory_saving_fraction(
-        simulate_fleet(traces10, "warmswap", cm, deg),
-        simulate_fleet(traces10, "prebaking", cm, deg))
+            f"degenerate scenario run diverged from simulate() for {method}"
+    saving = res.summary["memory_saving_vs_prebaking"]
     degenerate["memory_saving_vs_prebaking"] = saving
     emit("fleet/degenerate/headline", saving * 100,
          "memory_saving_pct at sharing degree 10 (paper: 88)")
     out["degenerate"] = degenerate
 
     # ------------------------------------------------------------------ the sweep
-    n_fns = 12 if smoke else 40
-    horizon = (1 if smoke else 7) * 24 * 60
-    base = dict(n_functions=n_fns, horizon_min=horizon, seed=1, n_images=4,
-                rate_model="zipf", total_rate_per_min=6.0)
-    base_fleet = dict(worker_capacity_bytes=2 * cm.image_bytes)
-
-    sweeps: Dict[str, List] = {
-        "workers": [1, 4] if smoke else [1, 2, 4, 8],
-        "capacity_images": [2] if smoke else [1, 2, 4, None],
-        "sharing_images": [4] if smoke else [1, 2, 5, 10],
-        "rate_skew": [1.1] if smoke else [0.6, 1.1, 1.6],
-    }
-
+    # One base spec (fleet_base.json), grid axes expanded by sweep().
+    img = cm.image_bytes
     out["sweep"] = {}
-    for w in sweeps["workers"]:
-        traces = generate_fleet_traces(**base)
-        out["sweep"][f"workers={w}"] = _cell(
-            traces, cm, FleetConfig(n_workers=w, **base_fleet), f"workers={w}")
-    for cap in sweeps["capacity_images"]:
-        traces = generate_fleet_traces(**base)
-        cfg = FleetConfig(n_workers=4, worker_capacity_bytes=(
-            None if cap is None else cap * cm.image_bytes))
-        out["sweep"][f"capacity={cap}"] = _cell(traces, cm, cfg,
-                                                f"capacity={cap}")
-    for n_img in sweeps["sharing_images"]:
-        traces = generate_fleet_traces(**{**base, "n_images": n_img})
-        cfg = FleetConfig(n_workers=4, **base_fleet)
-        cell = _cell(traces, cm, cfg, f"images={n_img}")
-        cell["sharing_degrees"] = sharing_degrees(traces)
+    for r in sweep_file(scenario_path("fleet_base"),
+                        {"n_workers": [1, 4] if smoke else [1, 2, 4, 8]},
+                        smoke=smoke):
+        w = r.scenario["n_workers"]
+        out["sweep"][f"workers={w}"] = scenario_cell(r, f"workers={w}")
+    caps = [2] if smoke else [1, 2, 4, None]
+    for cap, r in zip(caps, sweep_file(
+            scenario_path("fleet_base"),
+            {"worker_capacity_bytes": [None if c is None else c * img
+                                       for c in caps]}, smoke=smoke)):
+        out["sweep"][f"capacity={cap}"] = scenario_cell(r, f"capacity={cap}")
+    for r in sweep_file(scenario_path("fleet_base"),
+                        {"traces.kwargs.n_images": [4] if smoke
+                         else [1, 2, 5, 10]}, smoke=smoke):
+        n_img = r.scenario["traces"]["kwargs"]["n_images"]
+        cell = scenario_cell(r, f"images={n_img}")
+        cell["sharing_degrees"] = sharing_degrees(r.traces)
         out["sweep"][f"images={n_img}"] = cell
-    for s in sweeps["rate_skew"]:
-        traces = generate_fleet_traces(**{**base, "rate_skew": s})
-        out["sweep"][f"skew={s}"] = _cell(
-            traces, cm, FleetConfig(n_workers=4, **base_fleet), f"skew={s}")
+    for r in sweep_file(scenario_path("fleet_base"),
+                        {"traces.kwargs.rate_skew": [1.1] if smoke
+                         else [0.6, 1.1, 1.6]}, smoke=smoke):
+        s = r.scenario["traces"]["kwargs"]["rate_skew"]
+        out["sweep"][f"skew={s}"] = scenario_cell(r, f"skew={s}")
 
     # ------------------------------------------------------------ queueing cell
     # Capped concurrency under the same workload: queue delay becomes visible
-    # and the tail separates from the mean (the arrival-ordered loop reported
-    # impossible flat latencies here).
-    traces = generate_fleet_traces(**base)
+    # and the tail separates from the mean.
     out["queueing"] = {}
-    for cap in (None, 2, 1):
-        r = simulate_fleet(traces, "warmswap", cm,
-                           FleetConfig(n_workers=2, max_instances_per_fn=cap,
-                                       **base_fleet))
-        s = _validated_samples(r, f"cap={cap}/warmswap")
-        pct = r.latency_percentiles()
+    for cap, r in zip((None, 2, 1), sweep_file(
+            scenario_path("queueing"),
+            {"max_instances_per_fn": [None, 2, 1]}, smoke=smoke)):
+        rw = r.raw["warmswap"]
+        s = validated_samples(rw, f"fleet/cap={cap}/warmswap")
+        pct = rw.latency_percentiles()
         out["queueing"][f"cap={cap}"] = {
-            "avg_latency_s": r.avg_latency_s,
+            "avg_latency_s": rw.avg_latency_s,
             "latency_percentiles_s": pct,
-            "queued": r.n_queued, "queue_delay_s": r.queue_delay_s,
+            "queued": rw.n_queued, "queue_delay_s": rw.queue_delay_s,
         }
-        emit(f"fleet/cap={cap}/warmswap", r.avg_latency_s * 1e6,
-             f"p99={pct['p99'] * 1e3:.1f}ms queued={r.n_queued} "
-             f"queue_delay={r.queue_delay_s:.2f}s")
+        emit(f"fleet/cap={cap}/warmswap", rw.avg_latency_s * 1e6,
+             f"p99={pct['p99'] * 1e3:.1f}ms queued={rw.n_queued} "
+             f"queue_delay={rw.queue_delay_s:.2f}s")
         assert s.size == 0 or pct["p99"] >= pct["p50"], "percentiles inverted"
 
     # --------------------------------------------------------- page-cost model
@@ -181,13 +133,11 @@ def run() -> Dict:
     from repro.core.costmodel import PageCostModel
 
     model = PageCostModel(cost=cm)
-    deg_model = PageCostModel.degenerate(cm)
     page_out: Dict = {}
+    res_deg = run_file(scenario_path("page_degenerate"), smoke=smoke)
     for method in METHODS:
-        rf = simulate_fleet(traces10, method, cm,
-                            FleetConfig(n_workers=1, max_instances_per_fn=1,
-                                        page_cost=deg_model))
-        rs = simulate(traces10, method, cm, KeepAlivePolicy(15.0))
+        rf = res_deg.raw[method]
+        rs = simulate(res_deg.traces, method, cm, KeepAlivePolicy(15.0))
         assert (abs(rf.total_latency_s - rs.total_latency_s) < 1e-9
                 and rf.memory_bytes == rs.memory_bytes), \
             f"degenerate page model diverged from simulate() for {method}"
@@ -223,20 +173,19 @@ def run() -> Dict:
     emit("fleet/page_model/dep_speedup_paper_scale", paper_speedup,
          "baseline/warmswap dependency-loading ratio (paper band: 2.2-3.2x)")
 
-    rw = simulate_fleet(traces, "warmswap", cm,
-                        FleetConfig(n_workers=4, page_cost=model))
-    rp = simulate_fleet(traces, "prebaking", cm,
-                        FleetConfig(n_workers=4, page_cost=model))
-    _validated_samples(rw, "page_model/warmswap")
-    _validated_samples(rp, "page_model/prebaking")
+    res_page = run_file(scenario_path("page_sharing"), smoke=smoke)
+    # the scenario path reports the same speedup through its own summary
+    assert res_page.summary["dependency_loading_speedup"] == paper_speedup
+    rw, rp = res_page.raw["warmswap"], res_page.raw["prebaking"]
+    validated_samples(rw, "fleet/page_model/warmswap")
+    validated_samples(rp, "fleet/page_model/prebaking")
     assert rp.shared_cache_peak_bytes > rw.shared_cache_peak_bytes > 0
     footprint_saving = 1.0 - rw.shared_cache_peak_bytes / rp.shared_cache_peak_bytes
     # the same comparison on the HEADLINE workload (10 fns, ONE image): the
     # shared tier holds 1 image vs 10 snapshots -> 90 % (the 88 % headline
     # counts warmswap's per-fn metadata too; the tier holds images only)
-    deg_page = FleetConfig(n_workers=1, max_instances_per_fn=1, page_cost=model)
-    rwh = simulate_fleet(traces10, "warmswap", cm, deg_page)
-    rph = simulate_fleet(traces10, "prebaking", cm, deg_page)
+    res_head = run_file(scenario_path("page_headline"), smoke=smoke)
+    rwh, rph = res_head.raw["warmswap"], res_head.raw["prebaking"]
     headline_saving = 1.0 - (rwh.shared_cache_peak_bytes
                              / rph.shared_cache_peak_bytes)
     assert headline_saving > 0.85
@@ -256,12 +205,8 @@ def run() -> Dict:
          f"shared-tier saving % (hotswap {rw.shared_cache_peak_bytes >> 20}MB "
          f"vs prebaking {rp.shared_cache_peak_bytes >> 20}MB)")
 
-    rb = simulate_fleet(traces, "warmswap", cm,
-                        FleetConfig(n_workers=4, placement="round_robin",
-                                    page_cost=model,
-                                    worker_capacity_bytes=cm.image_bytes,
-                                    shared_cache_bytes=2 * cm.image_bytes))
-    _validated_samples(rb, "page_model/bounded_cache")
+    rb = run_file(scenario_path("bounded_cache"), smoke=smoke).raw["warmswap"]
+    validated_samples(rb, "fleet/page_model/bounded_cache")
     page_out["bounded_shared_cache"] = {
         "avg_latency_s": rb.avg_latency_s,
         "tiers": {"local": rb.cache_local_hits, "remote": rb.cache_remote_hits,
@@ -276,25 +221,29 @@ def run() -> Dict:
 
     # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
-    for placement in ("affinity", "least_loaded", "round_robin"):
-        cfg = FleetConfig(n_workers=4, placement=placement, **base_fleet)
-        out["placement"][placement] = _cell(traces, cm, cfg,
-                                            f"placement={placement}")
+    for r in sweep_file(scenario_path("placement"),
+                        {"placement.name": ["affinity", "least_loaded",
+                                            "round_robin"]}, smoke=smoke):
+        placement = r.scenario["placement"]["name"]
+        out["placement"][placement] = scenario_cell(
+            r, f"placement={placement}")
     out["prewarm"] = {}
-    for pw in ("none", "histogram", "spes"):
-        r = simulate_fleet(traces, "warmswap", cm,
-                           FleetConfig(n_workers=4, prewarm=pw, **base_fleet))
-        _validated_samples(r, f"prewarm={pw}/warmswap")
+    for r in sweep_file(scenario_path("prewarm"),
+                        {"prewarm.name": ["none", "histogram", "spes"]},
+                        smoke=smoke):
+        pw = r.scenario["prewarm"]["name"]
+        rw = r.raw["warmswap"]
+        validated_samples(rw, f"fleet/prewarm={pw}/warmswap")
         out["prewarm"][pw] = {
-            "avg_latency_s": r.avg_latency_s, "cold": r.n_cold,
-            "latency_percentiles_s": r.latency_percentiles(),
-            "prewarm_spawns": r.prewarm_spawns, "prewarm_hits": r.prewarm_hits,
-            "prewarm_dropped": r.prewarm_dropped,
-            "instance_resident_min": r.instance_resident_min,
+            "avg_latency_s": rw.avg_latency_s, "cold": rw.n_cold,
+            "latency_percentiles_s": rw.latency_percentiles(),
+            "prewarm_spawns": rw.prewarm_spawns, "prewarm_hits": rw.prewarm_hits,
+            "prewarm_dropped": rw.prewarm_dropped,
+            "instance_resident_min": rw.instance_resident_min,
         }
-        emit(f"fleet/prewarm={pw}/warmswap", r.avg_latency_s * 1e6,
-             f"cold={r.n_cold} resident_min={r.instance_resident_min:.0f} "
-             f"dropped={r.prewarm_dropped}")
+        emit(f"fleet/prewarm={pw}/warmswap", rw.avg_latency_s * 1e6,
+             f"cold={rw.n_cold} resident_min={rw.instance_resident_min:.0f} "
+             f"dropped={rw.prewarm_dropped}")
 
     save_json("bench_fleet", out)
     return out

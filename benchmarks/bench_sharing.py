@@ -2,20 +2,25 @@
 two-week Azure-statistics traces — average latency per invocation-rate quartile and
 required warm-up memory, WarmSwap vs Prebaking vs Baseline.
 
-Runs twice: once with the PAPER's measured cost numbers (Table 2; the faithful
-simulation) and once with THIS machine's measured cold-start costs (from
-bench_coldstart artifacts when present)."""
+Driven by the checked-in ``benchmarks/scenarios/sharing_fig7.json`` spec
+(single-worker engine) through the experiments CLI's ``run_file``. Runs twice:
+once with the PAPER's measured cost numbers (Table 2; the faithful simulation)
+and once with THIS machine's measured cold-start costs (from bench_coldstart
+artifacts when present) — the measured variant is the same spec with its
+``cost`` component overridden to ``scalar`` + measured kwargs."""
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict
+from typing import Dict, Optional
 
-from benchmarks.common import RESULTS_DIR, emit, save_json, smoke_mode
+from benchmarks.common import (RESULTS_DIR, emit, save_json, scenario_path,
+                               smoke_mode, validated_samples)
 
 
-def _measured_cost_model():
-    from repro.core.simulator import CostModel
+def _measured_cost_kwargs() -> Optional[Dict]:
+    """Scalar-cost-model kwargs from this machine's bench_coldstart artifact,
+    or None when it has not been produced yet."""
     path = os.path.join(RESULTS_DIR, "bench_coldstart.json")
     if not os.path.exists(path):
         return None
@@ -23,42 +28,40 @@ def _measured_cost_model():
     rnn = rows.get("rnn_serving")
     if not rnn:
         return None
-    return CostModel(
-        cold_warmswap_s=rnn["cold_warmswap_s"],
-        cold_prebaking_s=rnn["cold_warmswap_s"] * 1.05,  # prebake ~ bulk restore
-        cold_baseline_s=rnn["cold_baseline_s"],
-        warm_s=rnn["warm_warmswap_s"],
-    )
+    return {
+        "cold_warmswap_s": rnn["cold_warmswap_s"],
+        "cold_prebaking_s": rnn["cold_warmswap_s"] * 1.05,  # prebake ~ bulk restore
+        "cold_baseline_s": rnn["cold_baseline_s"],
+        "warm_s": rnn["warm_warmswap_s"],
+    }
 
 
 def run() -> Dict:
-    from repro.core.keepalive import KeepAlivePolicy
-    from repro.core.simulator import (CostModel, memory_saving_fraction,
-                                      quartile_latencies, simulate)
-    from repro.core.traces import generate_traces
+    from repro.experiments import run_file
 
-    horizon_min = (24 * 60 if smoke_mode() else 2 * 7 * 24 * 60)
-    traces = generate_traces(10, horizon_min=horizon_min, seed=0)
+    smoke = smoke_mode()
     out: Dict = {}
-    models = {"paper_costs": CostModel.paper_table2()}
-    measured = _measured_cost_model()
+    variants: Dict[str, Optional[Dict]] = {"paper_costs": None}
+    measured = _measured_cost_kwargs()
     if measured is not None:
-        models["measured_costs"] = measured
+        variants["measured_costs"] = {
+            "cost.name": "scalar", "cost.kwargs": measured}
 
-    for label, cm in models.items():
-        res = {}
-        for method in ("warmswap", "prebaking", "baseline"):
-            r = simulate(traces, method, cm, KeepAlivePolicy(15.0))
+    for label, overrides in variants.items():
+        result = run_file(scenario_path("sharing_fig7"), smoke=smoke,
+                          overrides=overrides)
+        res: Dict = {}
+        for method, mr in result.methods.items():
+            validated_samples(result.raw[method], f"sharing/{label}/{method}")
             res[method] = {
-                "avg_latency_s": r.avg_latency_s,
-                "cold": r.n_cold, "warm": r.n_warm,
-                "memory_mb": r.memory_bytes / 1e6,
-                "quartile_latency_s": quartile_latencies(traces, r),
+                "avg_latency_s": mr.avg_latency_s,
+                "cold": mr.n_cold, "warm": mr.n_warm,
+                "memory_mb": mr.memory_bytes / 1e6,
+                "quartile_latency_s": mr.quartile_latency_s,
             }
-            emit(f"sharing/{label}/{method}", r.avg_latency_s * 1e6,
-                 f"mem={r.memory_bytes/1e6:.0f}MB cold={r.n_cold}")
-        saving = 1.0 - (res["warmswap"]["memory_mb"] /
-                        max(res["prebaking"]["memory_mb"], 1e-9))
+            emit(f"sharing/{label}/{method}", mr.avg_latency_s * 1e6,
+                 f"mem={mr.memory_bytes / 1e6:.0f}MB cold={mr.n_cold}")
+        saving = result.summary["memory_saving_vs_prebaking"]
         speed = (res["prebaking"]["avg_latency_s"] /
                  max(res["warmswap"]["avg_latency_s"], 1e-12))
         res["memory_saving_vs_prebaking"] = saving

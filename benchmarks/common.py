@@ -1,4 +1,5 @@
-"""Shared benchmark scaffolding: fleet setup, timing, CSV emission."""
+"""Shared benchmark scaffolding: fleet setup, timing, CSV emission, and the
+one validated-result path every simulation bench goes through."""
 from __future__ import annotations
 
 import json
@@ -8,6 +9,58 @@ import tempfile
 from typing import Dict, List, Optional
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+SCENARIOS_DIR = os.path.join(os.path.dirname(__file__), "scenarios")
+
+
+def scenario_path(name: str) -> str:
+    """Path of a checked-in scenario spec (``benchmarks/scenarios/*.json``)."""
+    return os.path.join(SCENARIOS_DIR, f"{name}.json")
+
+
+def validated_samples(r, label: str):
+    """NaN / negative per-request latencies are impossible under a correct
+    queueing model — fail loudly rather than report them. ``r`` is an
+    engine-native ``SimResult`` / ``FleetResult``; returns its samples."""
+    import numpy as np
+
+    s = np.asarray(r.latency_samples_s)
+    if s.size and (not np.isfinite(s).all() or (s < 0).any()):
+        raise RuntimeError(f"{label}: NaN or negative latency samples")
+    if r.queue_delay_s < 0 or not np.isfinite(r.queue_delay_s):
+        raise RuntimeError(f"{label}: invalid queue delay "
+                           f"{r.queue_delay_s!r}")
+    return s
+
+
+def scenario_cell(result, label: str, prefix: str = "fleet") -> Dict:
+    """One benchmark cell from a scenario ``Result``: per-method dict of the
+    headline numbers (validated via :func:`validated_samples`), one CSV row
+    emitted per method. Every simulation bench shares this path."""
+    from repro.core.simulator import quartile_percentiles
+
+    out: Dict = {}
+    for method, raw in result.raw.items():
+        validated_samples(raw, f"{prefix}/{label}/{method}")
+        mr = result.methods[method]
+        pct = mr.latency_percentiles_s
+        out[method] = {
+            "avg_latency_s": mr.avg_latency_s,
+            "latency_percentiles_s": pct,
+            "quartile_latency_s": mr.quartile_latency_s,
+            "quartile_percentiles_s": quartile_percentiles(result.traces, raw),
+            "peak_memory_mb": mr.memory_bytes / 1e6,
+            "cold": mr.n_cold, "warm": mr.n_warm,
+            "queued": mr.n_queued, "queue_delay_s": mr.queue_delay_s,
+            "pool_misses": mr.pool_misses, "evictions": mr.evictions,
+            "max_concurrent_instances": mr.max_concurrent_instances,
+            "instance_resident_min": mr.instance_resident_min,
+            "prewarm_dropped": mr.prewarm_dropped,
+        }
+        emit(f"{prefix}/{label}/{method}", mr.avg_latency_s * 1e6,
+             f"p99={pct['p99'] * 1e3:.1f}ms mem={mr.memory_bytes / 1e6:.0f}MB "
+             f"cold={mr.n_cold} queued={mr.n_queued} "
+             f"miss={mr.pool_misses} evict={mr.evictions}")
+    return out
 
 
 def smoke_mode() -> bool:

@@ -1,93 +1,106 @@
-"""Fleet simulation tour: concurrency, placement, capacity, pre-warm policies.
+"""Fleet simulation tour, scenario-first: every cell below is a checked-in
+declarative spec (``benchmarks/scenarios/*.json``) run through the one
+``repro.core.scenario.run()`` entry point — the same specs the benchmark
+suite and CI drive through ``python -m repro.experiments``.
 
-Walks the multi-worker simulator (repro.core.fleet) through the questions the
-single-worker model (repro.core.simulator) cannot answer:
+The questions the multi-worker engine answers beyond the single-worker model:
 
   1. Degenerate check — 1 worker / 1 instance per function reproduces the
-     paper's Fig. 7 numbers, including the ~88 % memory-saving headline.
+     paper's Fig. 7 numbers, including the ~88 % memory-saving headline
+     (asserted against the legacy ``simulate()`` wrapper).
   2. Does image-affinity placement beat round-robin on a skewed workload?
+     (one spec, ``sweep()`` over ``placement.name``)
   3. What does pool capacity pressure do to each method?
   4. How do keep-alive / pre-warm policies trade latency for residency?
-  5. What does an instance cap do to the tail? (queue-accurate P50/P95/P99
-     from the discrete-event engine — queued requests pay their wait.)
+     (``sweep()`` over ``prewarm.name`` — the PREWARM_POLICIES registry)
+  5. What does an instance cap do to the tail? (queue-accurate P50/P95/P99)
   6. What does a cold start actually *cost* when it is priced page by page?
-     (page-granular cost model + cluster-shared image cache: local pool hits
-     vs remote peer fetches vs source misses — see docs/SIMULATION.md.)
+     (page-granular cost model + cluster-shared image cache — the
+     ``bounded_cache`` spec vs the same spec with affinity placement)
 
     PYTHONPATH=src python examples/fleet_sim.py
 """
-from repro.core import (CostModel, FleetConfig, KeepAlivePolicy, PageCostModel,
-                        simulate, simulate_fleet)
-from repro.core.simulator import memory_saving_fraction
-from repro.core.traces import generate_fleet_traces, generate_traces, sharing_degrees
+import os
+
+from repro.core import CostModel, KeepAlivePolicy, PageCostModel, simulate
+from repro.core.scenario import Scenario, run, sweep
+from repro.core.traces import TRACE_GENERATORS, sharing_degrees
+
+SCENARIOS = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                         "scenarios")
+
+
+def spec(name: str) -> Scenario:
+    return Scenario.from_file(os.path.join(SCENARIOS, f"{name}.json"))
 
 
 def main() -> None:
     cm = CostModel.paper_table2()
 
     # --- 1. degenerate point == the paper's simulation --------------------------
-    traces10 = generate_traces(10, horizon_min=14 * 24 * 60, seed=0)
-    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
-    rw, rp = (simulate_fleet(traces10, m, cm, deg)
-              for m in ("warmswap", "prebaking"))
-    ref = simulate(traces10, "warmswap", cm, KeepAlivePolicy(15.0))
-    print(f"degenerate: fleet avg {rw.avg_latency_s * 1e3:.2f} ms "
+    res = run(spec("degenerate"))
+    rw = res.methods["warmswap"]
+    ref = simulate(res.traces, "warmswap", cm, KeepAlivePolicy(15.0))
+    print(f"degenerate: scenario avg {rw.avg_latency_s * 1e3:.2f} ms "
           f"== simulate() {ref.avg_latency_s * 1e3:.2f} ms; "
-          f"memory saving {memory_saving_fraction(rw, rp) * 100:.1f} % "
+          f"memory saving {res.summary['memory_saving_vs_prebaking'] * 100:.1f} % "
           f"(paper: 88 %)\n")
+    assert abs(rw.total_latency_s - ref.total_latency_s) < 1e-6
 
     # --- a skewed 40-function fleet over 4 shared images ------------------------
-    traces = generate_fleet_traces(40, horizon_min=7 * 24 * 60, seed=1,
-                                   n_images=4, rate_model="zipf",
-                                   total_rate_per_min=6.0)
-    print(f"fleet workload: 40 fns, sharing degrees {sharing_degrees(traces)}")
+    base = spec("fleet_base")
+    n_fns = base.traces.kwargs["n_functions"]
+    traces = TRACE_GENERATORS.build(base.traces.name, **base.traces.kwargs)
+    print(f"fleet workload: {n_fns} fns, sharing degrees "
+          f"{sharing_degrees(traces)}")
 
     # --- 2. placement policies under identical everything else ------------------
+    # (the shipped spec runs all three methods for the bench suite; this tour
+    # only reads warmswap, so don't simulate the other two)
     print("\nplacement (4 workers, pool capacity = 2 images each, warmswap):")
-    for placement in ("affinity", "least_loaded", "round_robin"):
-        cfg = FleetConfig(n_workers=4, placement=placement,
-                          worker_capacity_bytes=2 * cm.image_bytes)
-        r = simulate_fleet(traces, "warmswap", cm, cfg)
-        print(f"  {placement:13s} avg {r.avg_latency_s * 1e3:7.1f} ms | "
-              f"cold {r.n_cold:5d} | pool misses {r.pool_misses:4d} | "
-              f"evictions {r.evictions:4d} | peak mem {r.memory_bytes >> 20} MB")
+    for scn in sweep(spec("placement").with_overrides({"methods": ["warmswap"]}),
+                     {"placement.name": ["affinity", "least_loaded",
+                                         "round_robin"]}):
+        mr = run(scn).methods["warmswap"]
+        print(f"  {scn.placement.name:13s} avg {mr.avg_latency_s * 1e3:7.1f} ms | "
+              f"cold {mr.n_cold:5d} | pool misses {mr.pool_misses:4d} | "
+              f"evictions {mr.evictions:4d} | peak mem {mr.memory_bytes >> 20} MB")
 
     # --- 3. capacity pressure per method ----------------------------------------
     print("\npool capacity (4 workers, affinity):")
     for cap in (1, 2, None):
-        cfg = FleetConfig(n_workers=4, worker_capacity_bytes=(
-            None if cap is None else cap * cm.image_bytes))
-        row = []
-        for method in ("warmswap", "prebaking", "baseline"):
-            r = simulate_fleet(traces, method, cm, cfg)
-            row.append(f"{method} {r.avg_latency_s * 1e3:6.1f} ms/"
-                       f"{r.memory_bytes >> 20:4d} MB")
+        r = run(base.with_overrides({"worker_capacity_bytes": (
+            None if cap is None else cap * cm.image_bytes)}))
+        row = [f"{m} {mr.avg_latency_s * 1e3:6.1f} ms/"
+               f"{mr.memory_bytes >> 20:4d} MB"
+               for m, mr in r.methods.items()]
         print(f"  {str(cap or 'unlimited'):>9s} images/worker: " + " | ".join(row))
 
     # --- 4. pre-warm policies ----------------------------------------------------
     print("\npre-warm policy (4 workers, warmswap): latency vs residency")
-    for pw in ("none", "histogram", "spes"):
-        cfg = FleetConfig(n_workers=4, prewarm=pw)
-        r = simulate_fleet(traces, "warmswap", cm, cfg)
-        print(f"  {pw:9s} avg {r.avg_latency_s * 1e3:7.1f} ms | "
-              f"cold {r.n_cold:5d} | warm-instance residency "
-              f"{r.instance_resident_min:9.0f} inst-min | "
-              f"prewarm spawns/hits {r.prewarm_spawns}/{r.prewarm_hits}")
+    for scn in sweep(spec("prewarm"),
+                     {"prewarm.name": ["none", "histogram", "spes"]}):
+        mr = run(scn).methods["warmswap"]
+        print(f"  {scn.prewarm.name:9s} avg {mr.avg_latency_s * 1e3:7.1f} ms | "
+              f"cold {mr.n_cold:5d} | warm-instance residency "
+              f"{mr.instance_resident_min:9.0f} inst-min | "
+              f"prewarm spawns/hits {mr.prewarm_spawns}/{mr.prewarm_hits}")
+    peak = run(base.with_overrides(
+        {"worker_capacity_bytes": None, "methods": ["warmswap"]}))
     print("\nconcurrency: arrivals overlapping a busy instance spawn new ones "
           "(peak concurrent instances of one function above: "
-          f"{simulate_fleet(traces, 'warmswap', cm, FleetConfig(n_workers=4)).max_concurrent_instances})")
+          f"{peak.methods['warmswap'].max_concurrent_instances})")
 
     # --- 5. queueing: instance caps make the tail visible ------------------------
     print("\ninstance cap (2 workers, warmswap): queue delay shows in the tail")
-    for cap in (None, 2, 1):
-        cfg = FleetConfig(n_workers=2, max_instances_per_fn=cap,
-                          worker_capacity_bytes=2 * cm.image_bytes)
-        r = simulate_fleet(traces, "warmswap", cm, cfg)
-        p = r.latency_percentiles()
-        print(f"  cap={str(cap):>4s} avg {r.avg_latency_s * 1e3:7.1f} ms | "
+    for scn in sweep(spec("queueing"), {"max_instances_per_fn": [None, 2, 1]}):
+        mr = run(scn).methods["warmswap"]
+        p = mr.latency_percentiles_s
+        print(f"  cap={str(scn.max_instances_per_fn):>4s} "
+              f"avg {mr.avg_latency_s * 1e3:7.1f} ms | "
               f"P50 {p['p50'] * 1e3:6.1f} | P95 {p['p95'] * 1e3:7.1f} | "
-              f"P99 {p['p99'] * 1e3:7.1f} ms | queued {r.n_queued:4d} "
-              f"({r.queue_delay_s:.1f}s waiting)")
+              f"P99 {p['p99'] * 1e3:7.1f} ms | queued {mr.n_queued:4d} "
+              f"({mr.queue_delay_s:.1f}s waiting)")
 
     # --- 6. page-granular cold starts + the cluster-shared image cache ----------
     model = PageCostModel(cost=cm)
@@ -110,24 +123,18 @@ def main() -> None:
 
     print("\ncluster-shared cache (4 workers, pool = 1 image each, shared tier"
           " = 2 images, round-robin to force cross-worker traffic):")
-    r = simulate_fleet(traces, "warmswap", cm,
-                       FleetConfig(n_workers=4, placement="round_robin",
-                                   page_cost=model,
-                                   worker_capacity_bytes=cm.image_bytes,
-                                   shared_cache_bytes=2 * cm.image_bytes))
-    print(f"  cold starts by tier: local {r.cache_local_hits} | "
-          f"remote {r.cache_remote_hits} | source miss {r.cache_misses} | "
+    r = run(spec("bounded_cache")).methods["warmswap"]
+    print(f"  cold starts by tier: local {r.cache_hits['local']} | "
+          f"remote {r.cache_hits['remote']} | source miss {r.cache_hits['miss']} | "
           f"cluster evictions {r.shared_cache_evictions}")
     print(f"  network page volume {r.pages_transferred} pages | avg latency "
           f"{r.avg_latency_s * 1e3:.1f} ms | shared-tier peak "
           f"{r.shared_cache_peak_bytes >> 20} MB")
-    ra = simulate_fleet(traces, "warmswap", cm,
-                        FleetConfig(n_workers=4, page_cost=model,
-                                    worker_capacity_bytes=cm.image_bytes,
-                                    shared_cache_bytes=2 * cm.image_bytes))
+    ra = run(spec("bounded_cache").with_overrides(
+        {"placement.name": "affinity"})).methods["warmswap"]
     print(f"  ...with bandwidth-aware affinity placement instead: local "
-          f"{ra.cache_local_hits} | remote {ra.cache_remote_hits} | miss "
-          f"{ra.cache_misses} | {ra.pages_transferred} pages moved "
+          f"{ra.cache_hits['local']} | remote {ra.cache_hits['remote']} | miss "
+          f"{ra.cache_hits['miss']} | {ra.pages_transferred} pages moved "
           f"({ra.avg_latency_s * 1e3:.1f} ms avg)")
 
 

@@ -13,22 +13,35 @@ Public API:
   * events      — typed discrete-event core (heap + tie-break contract)
   * fleet       — multi-worker discrete-event fleet simulation: concurrency,
                   queueing, placement, capacity, latency percentiles
+  * scenario    — declarative Scenario spec + the one run() entry point +
+                  sweep() grid expansion (docs/API.md)
   * workloads   — FunctionBench-analogue suite (Table 1)
+
+Pluggable components are addressed by string key via Registry instances
+(PREWARM_POLICIES, TRACE_GENERATORS, COST_MODELS, PAGE_COST_MODELS,
+serving.scheduler.PLACEMENTS, workloads.WORKLOADS); a @register("name")
+decorator adds new ones without touching the engines.
 """
 from repro.core.coldstart import ColdStartConfig, ColdStartOrchestrator, PhaseTimes
-from repro.core.costmodel import PageCostModel
+from repro.core.costmodel import PAGE_COST_MODELS, PageCostModel
 from repro.core.events import Event, EventKind, EventQueue
 from repro.core.fleet import FleetConfig, FleetResult, simulate_fleet
 from repro.core.image import ImageMetadata, LiveDependencyImage, build_image
-from repro.core.keepalive import (BytesAwareKeepAlive, HistogramKeepAlive,
-                                  KeepAlivePolicy, PrewarmPolicy, SpesPrewarm,
+from repro.core.keepalive import (PREWARM_POLICIES, BytesAwareKeepAlive,
+                                  HistogramKeepAlive, KeepAlivePolicy,
+                                  PrewarmPolicy, SpesPrewarm,
                                   expected_cold_starts)
 from repro.core.migration import LinkModel, MigrationClient, PageServer, RestorePolicy
 from repro.core.pages import PageTable, materialize, paginate
 from repro.core.pool import CapacityLedger, ClusterImageCache, DependencyManager
-from repro.core.registry import FunctionRegistry
-from repro.core.simulator import CostModel, memory_saving_fraction, simulate
-from repro.core.traces import generate_fleet_traces, generate_traces
+from repro.core.registry import FunctionRegistry, Registry, UnknownComponentError
+from repro.core.scenario import (ComponentSpec, MethodResult, Result,
+                                 RunOverrides, Scenario, run, sweep,
+                                 validate_result)
+from repro.core.simulator import (COST_MODELS, CostModel,
+                                  memory_saving_fraction, simulate)
+from repro.core.traces import (TRACE_GENERATORS, generate_fleet_traces,
+                               generate_traces)
 
 __all__ = [
     "ColdStartConfig", "ColdStartOrchestrator", "PhaseTimes",
@@ -40,7 +53,10 @@ __all__ = [
     "LinkModel", "MigrationClient", "PageServer", "RestorePolicy",
     "PageTable", "materialize", "paginate",
     "CapacityLedger", "ClusterImageCache", "DependencyManager",
-    "FunctionRegistry",
+    "FunctionRegistry", "Registry", "UnknownComponentError",
+    "ComponentSpec", "MethodResult", "Result", "RunOverrides", "Scenario",
+    "run", "sweep", "validate_result",
     "CostModel", "PageCostModel", "memory_saving_fraction", "simulate",
     "generate_traces", "generate_fleet_traces",
+    "COST_MODELS", "PAGE_COST_MODELS", "PREWARM_POLICIES", "TRACE_GENERATORS",
 ]

@@ -46,10 +46,17 @@ from typing import Optional
 
 from repro.core.migration import LinkModel
 from repro.core.pages import DEFAULT_PAGE_SIZE
+from repro.core.registry import Registry
 from repro.core.simulator import CostModel, method_cold_latency_s
 
 #: Valid values for the ``tier`` argument of :meth:`PageCostModel.cold_latency_s`.
 TIERS = ("local", "remote", "miss")
+
+#: Name -> page-cost-model factory. Every factory takes the resolved scalar
+#: ``cost`` model as its first kwarg (scenario specs inject it): ``default``
+#: is the page-granular model with its stock link tiers, ``degenerate`` the
+#: scalar-equivalent configuration (infinite bandwidth, zero RTT).
+PAGE_COST_MODELS = Registry("page cost model")
 
 
 def _default_local() -> LinkModel:
@@ -223,3 +230,27 @@ class PageCostModel:
         ws_s = (self.cost.cold_warmswap_s
                 + self.blocking_s(total, self._link(tier)))
         return base_s / max(ws_s, 1e-12)
+
+
+def _link_from(value) -> LinkModel:
+    """A :class:`LinkModel` from a JSON-shaped dict (scenario kwargs) or a
+    ready instance."""
+    if isinstance(value, LinkModel):
+        return value
+    return LinkModel(**value)
+
+
+@PAGE_COST_MODELS.register("default")
+def _build_default(cost: CostModel, *, local=None, remote=None, source=None,
+                   **kwargs) -> PageCostModel:
+    """The stock page-granular model; ``local``/``remote``/``source`` accept
+    ``{"latency_s": ..., "bandwidth_bps": ...}`` dicts so scenario specs can
+    re-parameterize the link tiers from JSON."""
+    for name, value in (("local", local), ("remote", remote),
+                        ("source", source)):
+        if value is not None:
+            kwargs[name] = _link_from(value)
+    return PageCostModel(cost=cost, **kwargs)
+
+
+PAGE_COST_MODELS.register("degenerate", PageCostModel.degenerate)

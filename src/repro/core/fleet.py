@@ -56,8 +56,8 @@ from __future__ import annotations
 
 import copy
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple, Union
+from dataclasses import dataclass, field, replace
+from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -85,7 +85,12 @@ class FleetConfig:
     degenerate configuration — see docs/SIMULATION.md.
     """
     n_workers: int = 1
-    placement: str = "affinity"            # 'affinity' | 'least_loaded' | 'round_robin'
+    placement: Union[str, Callable] = "affinity"
+                                           # a serving/scheduler.PLACEMENTS key
+                                           # ('affinity' | 'least_loaded' |
+                                           # 'round_robin' | any registered
+                                           # strategy) or a ready strategy
+                                           # callable (workers, ctx) -> worker
     max_instances_per_fn: Optional[int] = None   # None = unbounded concurrency.
                                                  # The cap (and its FIFO queue) is
                                                  # per WORKER: with n_workers=1,
@@ -204,10 +209,7 @@ def _make_policy(cfg: FleetConfig) -> PrewarmPolicy:
         return copy.deepcopy(cfg.prewarm)
     if cfg.prewarm == "none":
         return PrewarmPolicy(keep_alive_min=cfg.keep_alive_min)
-    if cfg.prewarm not in PREWARM_POLICIES:
-        raise ValueError(f"unknown prewarm policy: {cfg.prewarm!r} "
-                         f"(choose from {sorted(PREWARM_POLICIES)})")
-    return PREWARM_POLICIES[cfg.prewarm]()
+    return PREWARM_POLICIES.build(cfg.prewarm)
 
 
 def simulate_fleet(
@@ -217,6 +219,12 @@ def simulate_fleet(
     fleet: Optional[FleetConfig] = None,
 ) -> FleetResult:
     """Discrete-event fleet simulation (see the module docstring).
+
+    Thin wrapper over the declarative entry point
+    (:func:`repro.core.scenario.run` with ``engine='fleet'``): the engine
+    body is :func:`_simulate_fleet_impl`, and this signature survives for
+    callers that already hold resolved components. New code should build a
+    :class:`~repro.core.scenario.Scenario` instead.
 
     Args:
         traces: per-function arrival traces (times in minutes).
@@ -230,17 +238,33 @@ def simulate_fleet(
         peak resident memory (bytes), queueing/placement/pool stats, and —
         under the page model — shared-cache hit tiers and network page volume.
     """
+    # deferred: scenario imports this module (the engine impl lives here)
+    from repro.core.scenario import RunOverrides, Scenario, run
+    result = run(Scenario(engine="fleet", methods=[method]),
+                 overrides=RunOverrides(traces=traces, cost=cost, fleet=fleet))
+    return result.raw[method]
+
+
+def _simulate_fleet_impl(
+    traces: List[Trace],
+    method: str,
+    cost: CostModel,
+    fleet: Optional[FleetConfig] = None,
+) -> FleetResult:
+    """The discrete-event engine body behind :func:`simulate_fleet` (same
+    contract); called by :func:`repro.core.scenario.run`."""
     fleet = fleet if fleet is not None else FleetConfig()
     if fleet.n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {fleet.n_workers}")
-    if fleet.placement not in ("affinity", "least_loaded", "round_robin"):
-        raise ValueError(f"unknown placement: {fleet.placement!r}")
     if fleet.shared_cache_bytes is not None and fleet.page_cost is None:
         raise ValueError("shared_cache_bytes bounds the page-model cluster "
                          "tier; set FleetConfig.page_cost to enable it")
     # deferred: repro.serving pulls in the model/engine stack, which a
     # simulation-only import of repro.core should not pay for
-    from repro.serving.scheduler import place_invocation
+    from repro.serving.scheduler import (PLACEMENTS, PlacementContext,
+                                         place_invocation)
+    strategy = (PLACEMENTS.build(fleet.placement)
+                if isinstance(fleet.placement, str) else fleet.placement)
     policy = _make_policy(fleet)
     cold_base = method_cold_latency_s(cost, method)
     page = fleet.page_cost
@@ -355,32 +379,26 @@ def simulate_fleet(
         return page.transfer_blocking_s(tier_of(w, key),
                                         image_bytes=resident_bytes_of(key))
 
+    def placement_ctx(fn: int, t: float, key: str,
+                      with_warm: bool) -> "PlacementContext":
+        """All placement signals for one decision. Under the page model the
+        residency signal is the bandwidth/residency-aware transfer-cost
+        estimate (local beats remote beats source-miss); otherwise it is
+        boolean pool residency. Strategies ignore what they don't rank by."""
+        ctx = PlacementContext(
+            load=lambda w: w.load(t),
+            queue_depth=_Worker.queue_depth,
+            has_warm=(lambda w: w.idle_instance(fn, t) is not None)
+            if with_warm else None,
+            fn=fn, t_min=t, arrival_seq=arrival_seq,
+        )
+        if page is not None and method != "baseline":
+            return replace(ctx, start_cost=lambda w: start_cost_s(w, key))
+        return replace(ctx, holds_image=lambda w: w.ledger.holds(key))
+
     def pick_worker(fn: int, t: float) -> _Worker:
         key = resident_key(fn)
-        if fleet.placement == "round_robin":
-            w = workers[arrival_seq % len(workers)]
-        elif fleet.placement == "least_loaded":
-            w = place_invocation(workers, load=lambda w: w.load(t),
-                                 queue_depth=_Worker.queue_depth)
-        elif page is not None and method != "baseline":
-            # bandwidth/residency-aware affinity: warm instance first, then
-            # the worker with the cheapest estimated page transfer (local
-            # beats remote beats source-miss; equal tiers fall back to load)
-            w = place_invocation(
-                workers,
-                load=lambda w: w.load(t),
-                queue_depth=_Worker.queue_depth,
-                has_warm=lambda w: w.idle_instance(fn, t) is not None,
-                start_cost=lambda w: start_cost_s(w, key),
-            )
-        else:                          # affinity
-            w = place_invocation(
-                workers,
-                load=lambda w: w.load(t),
-                queue_depth=_Worker.queue_depth,
-                has_warm=lambda w: w.idle_instance(fn, t) is not None,
-                holds_image=lambda w: w.ledger.holds(key),
-            )
+        w = strategy(workers, placement_ctx(fn, t, key, with_warm=True))
         if w.idle_instance(fn, t) is not None:
             res.placement_warm_hits += 1
         elif w.ledger.holds(key):
@@ -500,15 +518,11 @@ def simulate_fleet(
         for w in workers:
             if w.alive(fn):
                 return                 # something is already warm; don't double-spawn
+        # pre-warm spawns always use affinity-shaped placement (no instance
+        # is warm yet, so only the residency/transfer signal discriminates)
         key = resident_key(fn)
-        if page is not None and method != "baseline":
-            w = place_invocation(workers, load=lambda w: w.load(t),
-                                 queue_depth=_Worker.queue_depth,
-                                 start_cost=lambda w: start_cost_s(w, key))
-        else:
-            w = place_invocation(workers, load=lambda w: w.load(t),
-                                 queue_depth=_Worker.queue_depth,
-                                 holds_image=lambda w: w.ledger.holds(key))
+        w = place_invocation(workers, placement_ctx(fn, t, key,
+                                                    with_warm=False))
         if method != "baseline":
             admit_resident(w, key, t)
             if method == "warmswap":

@@ -17,6 +17,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.registry import Registry
+
 
 def p_no_invocation(lam: float, keep_alive_min: float) -> float:
     return math.exp(-lam * keep_alive_min)
@@ -63,8 +65,19 @@ class KeepAlivePolicy:
 # The fleet engine also feeds completion events (on_completion) so policies can
 # anchor decisions to when an instance actually went idle, not just when the
 # request arrived (under queueing the two diverge).
+#
+# Policies are registry-pluggable: ``@PREWARM_POLICIES.register("name")`` makes
+# a policy addressable by string key from FleetConfig.prewarm, scenario specs,
+# and the experiments CLI without touching the engine.
 # ---------------------------------------------------------------------------------
 
+#: Name -> policy class. New policies self-register with
+#: ``@PREWARM_POLICIES.register("name")``; the fleet engine and scenario specs
+#: look them up by key (per-component kwargs go to the constructor).
+PREWARM_POLICIES = Registry("prewarm policy")
+
+
+@PREWARM_POLICIES.register("none")
 class PrewarmPolicy:
     """Base: fixed keep-alive (the paper's §4.5 setting), no prediction."""
 
@@ -113,6 +126,7 @@ class PrewarmPolicy:
         return None
 
 
+@PREWARM_POLICIES.register("histogram")
 class HistogramKeepAlive(PrewarmPolicy):
     """Serverless-in-the-wild-style adaptive keep-alive: per function, keep the
     instance warm for a high percentile of the observed inter-arrival times,
@@ -139,6 +153,7 @@ class HistogramKeepAlive(PrewarmPolicy):
         return min(max(ka, self.lo_min), self.hi_min)
 
 
+@PREWARM_POLICIES.register("spes")
 class SpesPrewarm(PrewarmPolicy):
     """SPES-style (arXiv 2403.17574) predictive pre-warming: keep-alive is cut
     short (cheap), and instead the next arrival is predicted from the median
@@ -166,6 +181,7 @@ class SpesPrewarm(PrewarmPolicy):
         return (t_min + med - margin, t_min + med + margin)
 
 
+@PREWARM_POLICIES.register("bytes")
 class BytesAwareKeepAlive(PrewarmPolicy):
     """Keep-alive priced in byte-minutes, not minutes.
 
@@ -202,9 +218,3 @@ class BytesAwareKeepAlive(PrewarmPolicy):
                    self.hi_min)
 
 
-PREWARM_POLICIES = {
-    "none": PrewarmPolicy,
-    "histogram": HistogramKeepAlive,
-    "spes": SpesPrewarm,
-    "bytes": BytesAwareKeepAlive,
-}

@@ -1,18 +1,136 @@
-"""Function registry: serverless endpoints = shared image ref + per-tenant handler.
+"""Registries: component name -> factory, plus the serverless function registry.
 
-The paper's isolation argument (§1) holds by construction here: the dependency image
-contains only the *public* base model; user-specific state (the handler head weights
-and the handler callable) never enters the shared pool. What Prebaking would snapshot
-per function — base + handler together — the registry keeps factored.
+Two distinct things live here:
+
+  * :class:`Registry` — the general name -> component pattern every pluggable
+    axis of the simulators uses (pre-warm policies, placement strategies, cost
+    models, trace generators, workloads). String keys are what makes the
+    declarative :mod:`~repro.core.scenario` spec serializable: a scenario
+    names its components, the registries build them. Unknown keys fail with
+    did-you-mean suggestions.
+  * :class:`FunctionRegistry` — serverless endpoints = shared image ref +
+    per-tenant handler. The paper's isolation argument (§1) holds by
+    construction here: the dependency image contains only the *public* base
+    model; user-specific state (the handler head weights and the handler
+    callable) never enters the shared pool. What Prebaking would snapshot per
+    function — base + handler together — the registry keeps factored.
 """
 from __future__ import annotations
 
+import difflib
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import numpy as np
+
+
+def did_you_mean(name: str, choices) -> str:
+    """A ``" — did you mean ...?"`` suffix for an unknown-key error message,
+    or ``""`` when nothing is close. Shared by :class:`Registry` and the
+    scenario spec validators."""
+    close = difflib.get_close_matches(str(name), list(choices), n=3)
+    return f" — did you mean {', '.join(map(repr, close))}?" if close else ""
+
+
+class UnknownComponentError(ValueError, KeyError):
+    """A registry lookup failed; the message carries did-you-mean hints.
+
+    Subclasses both :class:`ValueError` (what the simulators historically
+    raised for unknown names) and :class:`KeyError` (what a dict-shaped
+    lookup raises), so pre-registry ``except`` clauses keep working.
+    """
+
+    # KeyError.__str__ repr-quotes the message; keep plain Exception rendering
+    __str__ = Exception.__str__
+
+
+class Registry:
+    """Name -> component registry with a ``@register("name")`` decorator.
+
+    Components plug into the engines by string key — the unit of
+    serializability for scenario specs — without the engine ever naming the
+    concrete class. Registered objects are usually factories (classes or
+    functions); :meth:`build` calls them with per-component kwargs. A
+    registry can also hold plain instances (e.g. the workload suite), in
+    which case :meth:`build` returns them as-is when no kwargs are given.
+
+    Dict-shaped reads (``in``, ``[...]``, iteration over names, ``get``)
+    are supported so pre-registry call sites keep working unchanged.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind                      # human label for error messages
+        self._entries: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ registration
+    def register(self, name: str, obj: Any = None):
+        """Register ``obj`` under ``name``; usable as a decorator.
+
+        ``@REG.register("x")`` on a class/function registers it and returns
+        it unchanged; ``REG.register("x", obj)`` registers directly.
+        Re-registering a taken name raises (shadowing a component silently
+        would make scenario specs ambiguous).
+        """
+        if obj is None:
+            def deco(target):
+                self.register(name, target)
+                return target
+            return deco
+        if name in self._entries:
+            raise ValueError(f"{self.kind} {name!r} is already registered")
+        self._entries[name] = obj
+        return obj
+
+    # ----------------------------------------------------------------- lookup
+    def resolve(self, name: str) -> Any:
+        """The registered object for ``name``; unknown names raise
+        :class:`UnknownComponentError` with did-you-mean suggestions."""
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise UnknownComponentError(
+                f"unknown {self.kind}: {name!r} "
+                f"(choose from {sorted(self._entries)})"
+                f"{did_you_mean(name, self._entries)}") from None
+
+    def build(self, name: str, **kwargs) -> Any:
+        """Instantiate the component: call the registered factory with
+        ``kwargs``. A non-callable entry (a plain registered instance) is
+        returned as-is when no kwargs are given."""
+        obj = self.resolve(name)
+        if not callable(obj):
+            if kwargs:
+                raise TypeError(f"{self.kind} {name!r} is a plain instance "
+                                f"and takes no kwargs, got {sorted(kwargs)}")
+            return obj
+        return obj(**kwargs)
+
+    def names(self) -> List[str]:
+        """Registered names in registration order (dict-read semantics —
+        callers that enumerate components see the curated order; error
+        messages sort independently)."""
+        return list(self._entries)
+
+    # ------------------------------------------------------- dict-shaped reads
+    def get(self, name: str, default: Any = None) -> Any:
+        return self._entries.get(name, default)
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __getitem__(self, name: str) -> Any:
+        return self.resolve(name)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, {self.names()})"
 
 
 @dataclass

@@ -26,7 +26,13 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.keepalive import KeepAlivePolicy
+from repro.core.registry import Registry
 from repro.core.traces import Trace, quartile_groups
+
+#: Name -> scalar cost-model factory. Scenario specs address cost models by
+#: key: ``paper_table2`` is the paper's measured Table 2 numbers, ``scalar``
+#: builds a :class:`CostModel` from explicit kwargs.
+COST_MODELS = Registry("cost model")
 
 
 @dataclass
@@ -57,6 +63,10 @@ class CostModel:
         """The paper's measured rnn_serving-class numbers (Table 2 / §4.5)."""
         return cls(cold_warmswap_s=0.89, cold_prebaking_s=0.91, cold_baseline_s=2.2,
                    warm_s=0.004)
+
+
+COST_MODELS.register("scalar", CostModel)
+COST_MODELS.register("paper_table2", CostModel.paper_table2)
 
 
 def method_cold_latency_s(cost: CostModel, method: str) -> float:
@@ -206,6 +216,12 @@ def simulate(
 ) -> SimResult:
     """Single-worker, queue-accurate trace simulation (paper Fig. 7).
 
+    Thin wrapper over the declarative entry point
+    (:func:`repro.core.scenario.run` with ``engine='single'``): the engine
+    body is :func:`_simulate_impl`, and this signature survives for callers
+    that already hold resolved components (traces, a cost-model instance).
+    New code should build a :class:`~repro.core.scenario.Scenario` instead.
+
     Args:
         traces: per-function arrival traces (times in minutes).
         method: ``'warmswap' | 'prebaking' | 'baseline'``.
@@ -224,6 +240,26 @@ def simulate(
         (seconds), static per-method memory (bytes), queueing stats, and
         per-request latency samples.
     """
+    # deferred: scenario imports this module (the engine impl lives here)
+    from repro.core.scenario import RunOverrides, Scenario, run
+    result = run(Scenario(engine="single", methods=[method],
+                          shared_images=shared_images),
+                 overrides=RunOverrides(traces=traces, cost=cost,
+                                        keep_alive=keep_alive,
+                                        page_cost=page_cost))
+    return result.raw[method]
+
+
+def _simulate_impl(
+    traces: List[Trace],
+    method: str,
+    cost: CostModel,
+    keep_alive: Optional[KeepAlivePolicy] = None,
+    shared_images: int = 1,
+    page_cost: Optional["PageCostModel"] = None,
+) -> SimResult:
+    """The single-worker engine body behind :func:`simulate` (same contract);
+    called by :func:`repro.core.scenario.run`."""
     keep_alive = keep_alive if keep_alive is not None else KeepAlivePolicy(15.0)
     cold_latency = (page_cost.cold_latency_s(method, tier="local")
                     if page_cost is not None

@@ -22,9 +22,16 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.registry import Registry
+
 MEDIAN_RATE = 0.001      # calls/min (paper §2.2: >50 % below this)
 P75_RATE = 0.04          # calls/min (paper §4.5)
 _Z75 = 0.674489750196
+
+#: Name -> trace generator (a callable returning ``List[Trace]``). Scenario
+#: specs address trace sources by key with per-generator kwargs; new sources
+#: self-register with ``@TRACE_GENERATORS.register("name")``.
+TRACE_GENERATORS = Registry("trace generator")
 
 
 @dataclass
@@ -51,6 +58,7 @@ def poisson_arrivals(rate_per_min: float, horizon_min: float,
     return np.sort(rng.uniform(0.0, horizon_min, size=n))
 
 
+@TRACE_GENERATORS.register("azure")
 def generate_traces(n_functions: int, horizon_min: float = 2 * 7 * 24 * 60,
                     seed: int = 0,
                     rates: Optional[Sequence[float]] = None) -> List[Trace]:
@@ -89,6 +97,7 @@ def assign_images(n_functions: int, n_images: int, skew: float = 1.2,
     return out
 
 
+@TRACE_GENERATORS.register("fleet")
 def generate_fleet_traces(
     n_functions: int,
     horizon_min: float = 2 * 7 * 24 * 60,
@@ -139,6 +148,7 @@ def quartile_groups(traces: List[Trace]) -> dict:
     return groups
 
 
+@TRACE_GENERATORS.register("azure_csv")
 def load_azure_csv(path: str, n_functions: int, horizon_min: float,
                    seed: int = 0) -> List[Trace]:
     """Loader for the Azure Functions trace schema (per-minute counts per function).

@@ -1,0 +1,174 @@
+"""Experiments CLI: run declarative scenario specs from the command line.
+
+    PYTHONPATH=src python -m repro.experiments run benchmarks/scenarios/degenerate.json
+    PYTHONPATH=src python -m repro.experiments run spec.json --smoke --out out.json
+    PYTHONPATH=src python -m repro.experiments sweep spec.json --axis n_workers=1,4,16
+    PYTHONPATH=src python -m repro.experiments validate benchmarks/scenarios/*.json
+    PYTHONPATH=src python -m repro.experiments smoke benchmarks/scenarios/*.json
+    PYTHONPATH=src python -m repro.experiments list
+
+Scenario schema, registry keys, and the result schema: ``docs/API.md``.
+The programmatic mirrors (:func:`run_file`, :func:`sweep_file`) are what
+``benchmarks/bench_fleet.py`` drives its cells through, so the CLI and the
+benchmark suite share one code path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.core.scenario import (Result, Scenario, run, sweep,
+                                 validate_result)
+
+
+def run_file(path: str, *, smoke: bool = False,
+             overrides: Optional[Mapping[str, Any]] = None) -> Result:
+    """Load ``path``, apply optional dotted-path ``overrides``, run it, and
+    schema-validate the result before returning it."""
+    scn = Scenario.from_file(path)
+    if overrides:
+        scn = scn.with_overrides(overrides)
+    result = run(scn, smoke=smoke)
+    validate_result(result.to_dict())
+    return result
+
+
+def sweep_file(path: str, axes: Mapping[str, Sequence[Any]], *,
+               smoke: bool = False) -> List[Result]:
+    """Load ``path``, expand ``axes`` into the scenario grid, run every cell
+    (each result schema-validated)."""
+    base = Scenario.from_file(path)
+    out = []
+    for scn in sweep(base, axes):
+        result = run(scn, smoke=smoke)
+        validate_result(result.to_dict())
+        out.append(result)
+    return out
+
+
+def _parse_value(text: str) -> Any:
+    """One axis/override value: JSON literal when it parses, ``None`` for
+    none/null, the raw string otherwise."""
+    if text.lower() in ("none", "null"):
+        return None
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return text
+
+
+def parse_axis(text: str) -> Dict[str, List[Any]]:
+    """``"n_workers=1,4,16"`` -> ``{"n_workers": [1, 4, 16]}``."""
+    if "=" not in text:
+        raise ValueError(f"--axis needs path=v1,v2,..., got {text!r}")
+    path, _, values = text.partition("=")
+    return {path.strip(): [_parse_value(v) for v in values.split(",")]}
+
+
+def _print_result(result: Result, label: str = "") -> None:
+    prefix = f"{label}: " if label else ""
+    for m, mr in result.methods.items():
+        pct = mr.latency_percentiles_s
+        print(f"{prefix}{m:9s} avg {mr.avg_latency_s * 1e3:9.2f} ms | "
+              f"p99 {pct['p99'] * 1e3:9.2f} ms | cold {mr.n_cold:6d} | "
+              f"warm {mr.n_warm:6d} | queued {mr.n_queued:5d} | "
+              f"mem {mr.memory_bytes / 1e6:8.1f} MB")
+    for k, v in result.summary.items():
+        print(f"{prefix}summary.{k} = {v:.4f}")
+
+
+def _write(path: Optional[str], payload) -> None:
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="Run declarative simulation scenarios (docs/API.md).")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p_run = sub.add_parser("run", help="run one scenario spec")
+    p_run.add_argument("spec")
+    p_run.add_argument("--smoke", action="store_true",
+                       help="apply the spec's smoke_overrides (CI scale)")
+    p_run.add_argument("--out", default=None, help="write the result JSON here")
+    p_run.add_argument("--set", action="append", default=[], metavar="PATH=V",
+                       help="dotted-path override, e.g. n_workers=8")
+
+    p_sweep = sub.add_parser("sweep", help="grid-expand axes and run each cell")
+    p_sweep.add_argument("spec")
+    p_sweep.add_argument("--axis", action="append", default=[], required=True,
+                         metavar="PATH=V1,V2,...",
+                         help="sweep axis, e.g. --axis n_workers=1,4,16")
+    p_sweep.add_argument("--smoke", action="store_true")
+    p_sweep.add_argument("--out", default=None,
+                         help="write the list of result JSONs here")
+
+    p_val = sub.add_parser("validate", help="load + schema-check specs")
+    p_val.add_argument("specs", nargs="+")
+
+    p_smoke = sub.add_parser(
+        "smoke", help="run specs at smoke scale and schema-check the results")
+    p_smoke.add_argument("specs", nargs="+")
+
+    sub.add_parser("list", help="list the component registries")
+
+    args = ap.parse_args(argv)
+
+    if args.command == "run":
+        overrides = {}
+        for item in args.set:
+            if "=" not in item:
+                raise ValueError(f"--set needs path=value, got {item!r}")
+            path, _, value = item.partition("=")
+            overrides[path.strip()] = _parse_value(value)
+        result = run_file(args.spec, smoke=args.smoke, overrides=overrides)
+        _print_result(result)
+        _write(args.out, result.to_dict())
+        return 0
+
+    if args.command == "sweep":
+        axes: Dict[str, List[Any]] = {}
+        for item in args.axis:
+            axes.update(parse_axis(item))
+        results = sweep_file(args.spec, axes, smoke=args.smoke)
+        for r in results:
+            _print_result(r, label=r.scenario["name"])
+        _write(args.out, [r.to_dict() for r in results])
+        return 0
+
+    if args.command == "validate":
+        for path in args.specs:
+            scn = Scenario.from_file(path)
+            scn.validate_components()      # incl. the placement registry key
+            print(f"ok: {path} ({scn.name!r}, engine={scn.engine}, "
+                  f"methods={scn.methods})")
+        return 0
+
+    if args.command == "smoke":
+        for path in args.specs:
+            result = run_file(path, smoke=True)
+            print(f"ok: {path}")
+            _print_result(result, label=result.scenario["name"])
+        return 0
+
+    if args.command == "list":
+        from repro.core.costmodel import PAGE_COST_MODELS
+        from repro.core.keepalive import PREWARM_POLICIES
+        from repro.core.simulator import COST_MODELS
+        from repro.core.traces import TRACE_GENERATORS
+        from repro.serving.scheduler import PLACEMENTS
+        for reg in (TRACE_GENERATORS, COST_MODELS, PAGE_COST_MODELS,
+                    PREWARM_POLICIES, PLACEMENTS):
+            print(f"{reg.kind}: {', '.join(reg.names())}")
+        print("workload: (import repro.core.workloads to list — pulls in "
+              "the JAX model stack)")
+        return 0
+
+    raise AssertionError(f"unhandled command {args.command!r}")

@@ -1,0 +1,7 @@
+"""``python -m repro.experiments`` entry point."""
+import sys
+
+from repro.experiments import main
+
+if __name__ == "__main__":
+    sys.exit(main())

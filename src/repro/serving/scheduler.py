@@ -18,16 +18,45 @@ from __future__ import annotations
 
 import collections
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.registry import Registry
+
+#: Name -> placement-strategy factory. A built strategy is a callable
+#: ``strategy(workers, context: PlacementContext) -> worker``; the fleet
+#: engine (and scenario specs / the experiments CLI) address strategies by
+#: key, so new strategies plug in with ``@PLACEMENTS.register("name")``
+#: without touching the engine.
+PLACEMENTS = Registry("placement strategy")
+
+
+@dataclass
+class PlacementContext:
+    """Everything a placement strategy may consult for one invocation.
+
+    All signals are callables over a single worker (so strategies only pay
+    for what they read); optional ones are ``None`` when the caller has no
+    such signal. ``arrival_seq`` is the index of this arrival in the merged
+    stream — stateless strategies like round-robin rotate on it.
+    """
+    load: Callable                           # worker -> in-flight requests
+    has_warm: Optional[Callable] = None      # worker -> idle warm instance?
+    holds_image: Optional[Callable] = None   # worker -> pool holds the image?
+    queue_depth: Optional[Callable] = None   # worker -> queued (not running)
+    start_cost: Optional[Callable] = None    # worker -> est. transfer seconds
+    fn: Optional[int] = None                 # function index (informational)
+    t_min: float = 0.0                       # arrival time (minutes)
+    arrival_seq: int = 0                     # position in the arrival stream
+
 
 def place_invocation(
     workers: Sequence,
+    context: Optional[PlacementContext] = None,
     *,
-    load: Callable,
+    load: Optional[Callable] = None,
     has_warm: Optional[Callable] = None,
     holds_image: Optional[Callable] = None,
     queue_depth: Optional[Callable] = None,
@@ -52,35 +81,72 @@ def place_invocation(
 
     Args:
         workers: candidate workers (any hashable ids).
-        load: ``worker -> int`` in-flight request count.
-        has_warm: optional ``worker -> bool``, an idle warm instance exists.
-        holds_image: optional ``worker -> bool``, pool holds the live image.
-        queue_depth: optional ``worker -> int``, queued-but-not-running count.
-        start_cost: optional ``worker -> float`` estimated cold-start
-            transfer seconds on that worker; overrides ``holds_image`` when
-            provided.
+        context: a :class:`PlacementContext` bundling all signals — the
+            preferred calling convention.
+        load / has_warm / holds_image / queue_depth / start_cost:
+            **deprecated** keyword form (one callable per signal, same
+            semantics as the context fields). Kept as a back-compat shim;
+            pass a ``PlacementContext`` instead. Mixing both forms raises.
 
     Returns:
         The chosen worker, or ``None`` when ``workers`` is empty.
     """
+    if context is None:
+        if load is None:
+            raise TypeError("place_invocation needs a PlacementContext "
+                            "(or, deprecated, a load= callable)")
+        context = PlacementContext(load=load, has_warm=has_warm,
+                                   holds_image=holds_image,
+                                   queue_depth=queue_depth,
+                                   start_cost=start_cost)
+    elif any(s is not None for s in (load, has_warm, holds_image,
+                                     queue_depth, start_cost)):
+        raise TypeError("pass signals via PlacementContext OR the deprecated "
+                        "kwargs, not both")
     if not workers:
         return None
     rank = {w: i for i, w in enumerate(workers)}
-    if queue_depth is not None:
-        key = lambda w: (load(w) + queue_depth(w), rank[w])  # noqa: E731
+    if context.queue_depth is not None:
+        key = lambda w: (context.load(w) + context.queue_depth(w), rank[w])  # noqa: E731
     else:
-        key = lambda w: (load(w), rank[w])  # noqa: E731
-    if has_warm is not None:
-        warm = [w for w in workers if has_warm(w)]
+        key = lambda w: (context.load(w), rank[w])  # noqa: E731
+    if context.has_warm is not None:
+        warm = [w for w in workers if context.has_warm(w)]
         if warm:
             return min(warm, key=key)
-    if start_cost is not None:
-        return min(workers, key=lambda w: (start_cost(w),) + key(w))
-    if holds_image is not None:
-        holding = [w for w in workers if holds_image(w)]
+    if context.start_cost is not None:
+        return min(workers, key=lambda w: (context.start_cost(w),) + key(w))
+    if context.holds_image is not None:
+        holding = [w for w in workers if context.holds_image(w)]
         if holding:
             return min(holding, key=key)
     return min(workers, key=key)
+
+
+@PLACEMENTS.register("affinity")
+def _affinity_strategy():
+    """Warm-instance, then image/transfer-cost affinity, then least-loaded —
+    the full :func:`place_invocation` priority chain."""
+    def place(workers, ctx: PlacementContext):
+        return place_invocation(workers, ctx)
+    return place
+
+
+@PLACEMENTS.register("least_loaded")
+def _least_loaded_strategy():
+    """Load (in-flight + queue depth) only: ignores warmth and residency."""
+    def place(workers, ctx: PlacementContext):
+        return place_invocation(workers, replace(
+            ctx, has_warm=None, holds_image=None, start_cost=None))
+    return place
+
+
+@PLACEMENTS.register("round_robin")
+def _round_robin_strategy():
+    """Rotate on the arrival sequence number, blind to every other signal."""
+    def place(workers, ctx: PlacementContext):
+        return workers[ctx.arrival_seq % len(workers)] if workers else None
+    return place
 
 
 @dataclass
@@ -132,11 +198,10 @@ class FleetScheduler:
                     residency: Dict[str, Iterable[str]]) -> Optional[str]:
         """Placement that prefers healthy replicas whose pool holds ``image_id``
         (``residency``: replica -> live image ids), then lowest EWMA."""
-        return place_invocation(
-            self.healthy(),
+        return place_invocation(self.healthy(), PlacementContext(
             load=lambda n: self.health[n].ewma_s,
             holds_image=lambda n: image_id in residency.get(n, ()),
-        )
+        ))
 
     def observe(self, name: str, dt: float) -> bool:
         """Record a completed unit of work; returns True if it was a straggler."""

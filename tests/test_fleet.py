@@ -236,6 +236,21 @@ def test_place_invocation_priority():
                             holds_image=lambda w: False) == 1
 
 
+def test_placement_pool_hit_counter_counts_residency_routing():
+    """A cold arrival routed to the worker whose pool already holds the
+    image must increment placement_pool_hits (regression: a stale closure
+    over the event-loop's heap key silently zeroed the counter)."""
+    traces = generate_fleet_traces(12, horizon_min=24 * 60, seed=1,
+                                   n_images=4, rate_model="zipf",
+                                   total_rate_per_min=6.0)
+    cfg = FleetConfig(n_workers=4, worker_capacity_bytes=2 * CM.image_bytes)
+    r = simulate_fleet(traces, "warmswap", CM, cfg)
+    # the setup phase seeds each image on a home worker, so affinity routing
+    # must land cold starts on pool holders
+    assert r.placement_pool_hits > 0
+    assert r.placement_warm_hits > 0
+
+
 def test_fleet_scheduler_pick_affine_prefers_residency():
     s = FleetScheduler()
     for name in ("a", "b"):

@@ -1,0 +1,432 @@
+"""Declarative scenario API: JSON round-trip identity, registry did-you-mean
+errors, schema-version gating, degenerate equivalence of run() with the legacy
+simulate()/simulate_fleet() wrappers (incl. the 88 % memory-saving headline
+and the paper's 2.2-3.2x dependency-loading band), sweep() grid expansion,
+PlacementContext back-compat, and the experiments CLI."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import PageCostModel
+from repro.core.keepalive import KeepAlivePolicy
+from repro.core.registry import Registry, UnknownComponentError
+from repro.core.scenario import (METHODS, RESULT_SCHEMA_VERSION,
+                                 SCHEMA_VERSION, ComponentSpec, Scenario,
+                                 run, sweep, validate_result)
+from repro.core.simulator import CostModel, simulate
+from repro.core.fleet import FleetConfig, simulate_fleet
+from repro.core.traces import generate_traces
+from repro.serving.scheduler import PlacementContext, place_invocation
+
+SCENARIOS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                             "scenarios")
+
+CM = CostModel.paper_table2()
+
+
+def _spec_path(name):
+    return os.path.join(SCENARIOS_DIR, f"{name}.json")
+
+
+def _short_scenario(**kw):
+    """A fast-running fleet scenario (1-day horizon, 10 fns)."""
+    base = dict(engine="fleet", n_workers=1, max_instances_per_fn=1,
+                traces={"name": "azure",
+                        "kwargs": {"n_functions": 10, "horizon_min": 24 * 60,
+                                   "seed": 0}})
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------------------------
+# Generic Registry
+# ---------------------------------------------------------------------------------
+
+def test_registry_register_build_and_dict_reads():
+    reg = Registry("widget")
+
+    @reg.register("a")
+    class A:
+        def __init__(self, x=1):
+            self.x = x
+
+    assert "a" in reg and reg["a"] is A and list(reg) == ["a"]
+    assert reg.build("a", x=5).x == 5
+    assert reg.get("missing") is None
+
+
+def test_registry_duplicate_name_rejected():
+    reg = Registry("widget")
+    reg.register("a", object())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", object())
+
+
+def test_registry_plain_instance_entries():
+    reg = Registry("thing")
+    obj = object()
+    reg.register("x", obj)
+    assert reg.build("x") is obj
+    with pytest.raises(TypeError):
+        reg.build("x", key=1)          # instances take no kwargs
+
+
+def test_registry_unknown_key_did_you_mean():
+    reg = Registry("widget")
+    reg.register("histogram", object())
+    with pytest.raises(UnknownComponentError) as ei:
+        reg.resolve("histgram")
+    msg = str(ei.value)
+    assert "unknown widget" in msg and "histogram" in msg
+    # the error satisfies both legacy except clauses
+    assert isinstance(ei.value, ValueError) and isinstance(ei.value, KeyError)
+
+
+# ---------------------------------------------------------------------------------
+# Scenario spec: serialization + validation
+# ---------------------------------------------------------------------------------
+
+def test_round_trip_spec_dict_json_identity():
+    scn = Scenario(
+        name="rt", engine="fleet", methods=["warmswap", "prebaking"],
+        traces={"name": "fleet", "kwargs": {"n_functions": 8, "n_images": 2}},
+        cost={"name": "scalar", "kwargs": {
+            "cold_warmswap_s": 1.0, "cold_prebaking_s": 1.1,
+            "cold_baseline_s": 2.0, "warm_s": 0.01}},
+        page_cost={"name": "default", "kwargs": {"fault_fraction": 0.1}},
+        prewarm={"name": "histogram", "kwargs": {"percentile": 95.0}},
+        placement="least_loaded", n_workers=3, worker_capacity_bytes=123,
+        smoke_overrides={"traces.kwargs.n_functions": 2})
+    assert Scenario.from_dict(scn.to_dict()) == scn
+    assert Scenario.from_json(scn.to_json()) == scn
+    # a full JSON round trip (dict -> text -> dict) is also identity
+    assert Scenario.from_dict(json.loads(json.dumps(scn.to_dict()))) == scn
+
+
+def test_unknown_scenario_field_did_you_mean():
+    with pytest.raises(ValueError, match="n_workers"):
+        Scenario.from_dict({"n_worker": 4})
+
+
+def test_unknown_component_keys_fail_with_suggestions():
+    # trace/cost/page-cost/prewarm keys fail at CONSTRUCTION (strict loading)
+    with pytest.raises(UnknownComponentError, match="histogram"):
+        _short_scenario(prewarm="histgram")
+    with pytest.raises(UnknownComponentError, match="unknown trace generator"):
+        _short_scenario(traces="nope")
+    with pytest.raises(UnknownComponentError, match="unknown cost model"):
+        _short_scenario(cost="paper_table3")
+    with pytest.raises(UnknownComponentError, match="unknown page cost model"):
+        _short_scenario(page_cost="degenerat")
+    # placement resolves behind the repro.serving import: caught by
+    # validate_components() and run(), not construction
+    bad = _short_scenario(placement="afinity")
+    with pytest.raises(UnknownComponentError, match="affinity"):
+        bad.validate_components()
+    with pytest.raises(UnknownComponentError, match="affinity"):
+        run(bad)
+
+
+def test_future_schema_version_rejected():
+    d = _short_scenario().to_dict()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="newer than this build"):
+        Scenario.from_dict(d)
+    d["schema_version"] = "2"
+    with pytest.raises(ValueError, match="positive integer"):
+        Scenario.from_dict(d)
+
+
+def test_engine_and_method_validation():
+    with pytest.raises(ValueError, match="unknown engine"):
+        Scenario(engine="cluster")
+    with pytest.raises(ValueError, match="warmswap"):
+        Scenario(methods=["warmswp"])
+    with pytest.raises(ValueError, match="at least one method"):
+        Scenario(methods=[])
+
+
+def test_single_engine_rejects_fleet_only_fields():
+    """engine='single' must not silently ignore fleet shape: a spec asking
+    for 8 workers + a prewarm policy on the single-worker engine is a
+    mistake, not a request."""
+    with pytest.raises(ValueError, match="n_workers"):
+        Scenario(engine="single", n_workers=8)
+    with pytest.raises(ValueError, match="prewarm"):
+        Scenario(engine="single", prewarm="histogram")
+    with pytest.raises(ValueError, match="worker_capacity_bytes"):
+        Scenario(engine="single", worker_capacity_bytes=1 << 20)
+    # defaults (and single-engine knobs) stay valid
+    Scenario(engine="single", shared_images=4, keep_alive_min=5.0)
+    # ...and symmetrically, the fleet engine rejects the single-only knob
+    with pytest.raises(ValueError, match="shared_images"):
+        Scenario(engine="fleet", shared_images=4)
+
+
+def test_component_spec_coercion_and_bad_shapes():
+    assert ComponentSpec.coerce("x") == ComponentSpec("x")
+    assert ComponentSpec.coerce({"name": "x"}) == ComponentSpec("x", {})
+    with pytest.raises(ValueError, match="unknown key"):
+        ComponentSpec.coerce({"name": "x", "kwarg": {}})
+    with pytest.raises(ValueError, match="needs a 'name'"):
+        ComponentSpec.coerce({"kwargs": {}})
+    with pytest.raises(TypeError):
+        ComponentSpec.coerce(42)
+
+
+def test_smoke_overrides_applied_by_run():
+    scn = _short_scenario(
+        methods=["warmswap"],
+        smoke_overrides={"traces.kwargs.n_functions": 3})
+    full = run(scn)
+    small = run(scn, smoke=True)
+    assert len(full.traces) == 10
+    assert len(small.traces) == 3
+    assert small.scenario["traces"]["kwargs"]["n_functions"] == 3
+
+
+# ---------------------------------------------------------------------------------
+# run(): degenerate equivalence with the legacy wrappers
+# ---------------------------------------------------------------------------------
+
+def test_run_matches_legacy_wrappers_exactly_with_headline():
+    """The acceptance contract: run(Scenario.from_json(...)) reproduces the
+    scalar engine's numbers exactly — including the ~88 % memory-saving
+    headline — against both legacy wrappers."""
+    scn = Scenario.from_file(_spec_path("degenerate"))
+    res = run(Scenario.from_json(scn.to_json()))       # through JSON, on purpose
+    traces = generate_traces(**scn.traces.kwargs)
+    deg = FleetConfig(n_workers=1, max_instances_per_fn=1)
+    for method in METHODS:
+        rs = simulate(traces, method, CM, KeepAlivePolicy(15.0))
+        rf = simulate_fleet(traces, method, CM, deg)
+        mr = res.methods[method]
+        assert mr.total_latency_s == pytest.approx(rs.total_latency_s,
+                                                   abs=1e-6)
+        assert mr.total_latency_s == pytest.approx(rf.total_latency_s,
+                                                   abs=1e-6)
+        assert mr.memory_bytes == rs.memory_bytes == rf.memory_bytes
+        assert (mr.n_cold, mr.n_warm) == (rs.n_cold, rs.n_warm)
+    assert 0.85 < res.summary["memory_saving_vs_prebaking"] < 0.92
+
+
+def test_run_page_degenerate_and_speedup_band():
+    """The page-model spec reproduces the scalar engine under the degenerate
+    link model, and the default page model's dependency-loading speedup lands
+    in the paper's 2.2-3.2x band — both read off run()'s summary/raw."""
+    res = run(Scenario.from_file(_spec_path("page_degenerate")), smoke=True)
+    traces = res.traces
+    for method in METHODS:
+        rs = simulate(traces, method, CM, KeepAlivePolicy(15.0))
+        assert res.raw[method].total_latency_s == pytest.approx(
+            rs.total_latency_s, abs=1e-9)
+        assert res.raw[method].memory_bytes == rs.memory_bytes
+    # degenerate page model: infinite bandwidth, speedup collapses to the
+    # scalar base ratio
+    assert res.summary["dependency_loading_speedup"] == pytest.approx(
+        CM.cold_baseline_s / CM.cold_warmswap_s)
+    # the default page model reports the paper band through the same summary
+    res_page = run(_short_scenario(methods=["warmswap"],
+                                   page_cost="default"))
+    band = res_page.summary["dependency_loading_speedup"]
+    assert 2.2 <= band <= 3.2
+    assert band == PageCostModel(cost=CM).dependency_loading_speedup()
+
+
+def test_legacy_wrappers_return_native_result_types():
+    traces = generate_traces(4, horizon_min=300, seed=1)
+    rs = simulate(traces, "warmswap", CM)
+    rf = simulate_fleet(traces, "warmswap", CM)
+    assert type(rs).__name__ == "SimResult"
+    assert type(rf).__name__ == "FleetResult"
+    assert rs.n_invocations == rf.n_invocations == sum(
+        len(t.arrivals_min) for t in traces)
+
+
+def test_run_single_engine_and_shared_images():
+    scn = Scenario(engine="single", shared_images=3, methods=["warmswap"],
+                   traces={"name": "azure",
+                           "kwargs": {"n_functions": 10,
+                                      "horizon_min": 24 * 60, "seed": 0}})
+    res = run(scn)
+    assert res.methods["warmswap"].memory_bytes == (
+        3 * CM.image_bytes + 10 * CM.metadata_bytes)
+
+
+def test_component_kwargs_reach_factories():
+    """Per-component kwargs flow from the spec into the built components:
+    a 2x keep-alive window halves nothing but must change cold counts vs a
+    tiny window on a sparse trace."""
+    long_ka = run(_short_scenario(methods=["warmswap"], keep_alive_min=60.0))
+    short_ka = run(_short_scenario(methods=["warmswap"], keep_alive_min=0.5))
+    assert long_ka.methods["warmswap"].n_cold < \
+        short_ka.methods["warmswap"].n_cold
+    # prewarm kwargs: a histogram policy built with spec kwargs
+    res = run(_short_scenario(
+        methods=["warmswap"], max_instances_per_fn=None,
+        prewarm={"name": "histogram", "kwargs": {"percentile": 90.0}}))
+    assert res.methods["warmswap"].n_invocations > 0
+
+
+# ---------------------------------------------------------------------------------
+# sweep()
+# ---------------------------------------------------------------------------------
+
+def test_sweep_grid_expansion_and_names():
+    base = _short_scenario(name="base")
+    grid = sweep(base, {"n_workers": [1, 2],
+                        "placement.name": ["affinity", "round_robin"]})
+    assert len(grid) == 4
+    assert [s.n_workers for s in grid] == [1, 1, 2, 2]
+    assert {s.placement.name for s in grid} == {"affinity", "round_robin"}
+    assert grid[0].name == "base[n_workers=1,placement.name=affinity]"
+    assert base.n_workers == 1 and base.name == "base"     # base untouched
+    assert sweep(base, {}) == [base]
+
+
+def test_sweep_axis_values_reach_results():
+    base = _short_scenario(methods=["warmswap"])
+    results = [run(s) for s in sweep(base, {"n_workers": [1, 2]})]
+    assert [r.scenario["n_workers"] for r in results] == [1, 2]
+
+
+# ---------------------------------------------------------------------------------
+# Result schema
+# ---------------------------------------------------------------------------------
+
+def test_result_dict_schema_and_validation():
+    res = run(_short_scenario(methods=["warmswap", "prebaking"]))
+    d = res.to_dict()
+    assert d["result_schema_version"] == RESULT_SCHEMA_VERSION
+    assert set(d["methods"]) == {"warmswap", "prebaking"}
+    validate_result(d)                                  # no raise
+    validate_result(json.loads(json.dumps(d)))          # survives JSON
+    bad = json.loads(json.dumps(d))
+    del bad["methods"]["warmswap"]["n_cold"]
+    with pytest.raises(ValueError, match="missing"):
+        validate_result(bad)
+    bad2 = json.loads(json.dumps(d))
+    bad2["methods"]["warmswap"]["avg_latency_s"] = float("nan")
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_result(bad2)
+    bad3 = json.loads(json.dumps(d))
+    bad3["result_schema_version"] = RESULT_SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="result_schema_version"):
+        validate_result(bad3)
+
+
+def test_checked_in_scenarios_load_and_smoke_validate():
+    """Every shipped spec must parse; the fast ones must run at smoke scale
+    and produce schema-valid results (CI runs ALL of them via the CLI)."""
+    paths = sorted(glob.glob(os.path.join(SCENARIOS_DIR, "*.json")))
+    assert len(paths) >= 10
+    for path in paths:
+        scn = Scenario.from_file(path)
+        assert scn.name == os.path.splitext(os.path.basename(path))[0]
+    for name in ("degenerate", "sharing_fig7", "multi_tenant"):
+        res = run(Scenario.from_file(_spec_path(name)), smoke=True)
+        validate_result(res.to_dict())
+
+
+# ---------------------------------------------------------------------------------
+# PlacementContext back-compat shim
+# ---------------------------------------------------------------------------------
+
+def test_place_invocation_context_equals_legacy_kwargs():
+    load = {0: 5, 1: 0, 2: 3}.__getitem__
+    ctx = PlacementContext(load=load, has_warm=lambda w: w == 0,
+                           holds_image=lambda w: w == 2)
+    assert place_invocation([0, 1, 2], ctx) == place_invocation(
+        [0, 1, 2], load=load, has_warm=lambda w: w == 0,
+        holds_image=lambda w: w == 2) == 0
+    assert place_invocation([0, 1, 2], PlacementContext(load=load)) == 1
+    with pytest.raises(TypeError, match="not both"):
+        place_invocation([0, 1], ctx, load=load)
+    with pytest.raises(TypeError):
+        place_invocation([0, 1])
+
+
+def test_custom_placement_strategy_pluggable():
+    """A strategy registered at runtime is addressable from FleetConfig by
+    its key — the engine never enumerates strategies."""
+    from repro.serving.scheduler import PLACEMENTS
+
+    name = "always_last_test_only"
+    if name not in PLACEMENTS:
+        @PLACEMENTS.register(name)
+        def _always_last():
+            def place(workers, ctx):
+                return workers[-1]
+            return place
+
+    traces = generate_traces(4, horizon_min=300, seed=1)
+    r = simulate_fleet(traces, "warmswap", CM,
+                       FleetConfig(n_workers=3, placement=name))
+    assert r.per_worker[0]["served"] == r.per_worker[1]["served"] == 0
+    assert r.per_worker[2]["served"] == r.n_invocations
+
+
+# ---------------------------------------------------------------------------------
+# Experiments CLI
+# ---------------------------------------------------------------------------------
+
+def test_cli_run_writes_schema_valid_result(tmp_path, capsys):
+    from repro.experiments import main
+
+    out = tmp_path / "res.json"
+    rc = main(["run", _spec_path("degenerate"), "--smoke", "--out", str(out)])
+    assert rc == 0
+    validate_result(json.load(open(out)))
+    assert "memory_saving_vs_prebaking" in capsys.readouterr().out
+
+
+def test_cli_sweep_and_validate_and_list(tmp_path, capsys):
+    from repro.experiments import main, parse_axis
+
+    assert parse_axis("n_workers=1,4,16") == {"n_workers": [1, 4, 16]}
+    assert parse_axis("max_instances_per_fn=none,2") == \
+        {"max_instances_per_fn": [None, 2]}
+    assert parse_axis("placement.name=affinity,round_robin") == \
+        {"placement.name": ["affinity", "round_robin"]}
+    with pytest.raises(ValueError):
+        parse_axis("no-equals-sign")
+
+    out = tmp_path / "sweep.json"
+    rc = main(["sweep", _spec_path("degenerate"), "--smoke",
+               "--axis", "n_workers=1,2", "--out", str(out)])
+    assert rc == 0
+    cells = json.load(open(out))
+    assert [c["scenario"]["n_workers"] for c in cells] == [1, 2]
+    for c in cells:
+        validate_result(c)
+
+    assert main(["validate", _spec_path("degenerate"),
+                 _spec_path("prewarm")]) == 0
+    assert main(["list"]) == 0
+    text = capsys.readouterr().out
+    assert "placement strategy" in text and "prewarm policy" in text
+
+    # validate rejects unknown component keys, including placement's
+    bad = tmp_path / "bad.json"
+    spec = Scenario.from_file(_spec_path("degenerate")).to_dict()
+    spec["placement"]["name"] = "afinity"
+    bad.write_text(json.dumps(spec))
+    with pytest.raises(UnknownComponentError, match="affinity"):
+        main(["validate", str(bad)])
+    with pytest.raises(ValueError, match="--set"):
+        main(["run", _spec_path("degenerate"), "--smoke", "--set",
+              "n_workers"])
+
+
+def test_cli_set_override(capsys):
+    from repro.experiments import main
+
+    rc = main(["run", _spec_path("degenerate"), "--smoke",
+               "--set", "methods=[\"warmswap\"]",
+               "--set", "traces.kwargs.n_functions=4"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "warmswap" in out and "prebaking" not in out
