@@ -63,9 +63,25 @@ def scenario_cell(result, label: str, prefix: str = "fleet") -> Dict:
     return out
 
 
+def set_smoke(on: bool = True) -> None:
+    """Switch the whole bench suite to smoke (CI) scale. This is the ONE
+    place smoke scale is decided: the driver's ``--smoke`` flag and CI both
+    route through it (and through a spec's own ``smoke_overrides``), and
+    benches size their sweep axes with :func:`pick` — nothing re-derives
+    smoke overrides on its own."""
+    os.environ["REPRO_SMOKE"] = "1" if on else "0"
+
+
 def smoke_mode() -> bool:
     """True when the driver was invoked with ``--smoke`` (CI-sized runs)."""
     return os.environ.get("REPRO_SMOKE") == "1"
+
+
+def pick(full, smoke):
+    """The full-scale or smoke-scale variant of a bench knob (sweep axis
+    lists, sizes), chosen by :func:`smoke_mode` — so every bench scales
+    through the same switch instead of re-deriving it."""
+    return smoke if smoke_mode() else full
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

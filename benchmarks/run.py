@@ -16,19 +16,50 @@ results/.  Mapping to the paper:
     bench_kernels    ->  kernel-path microbenches + VMEM accounting
     bench_roofline   ->  assignment §Roofline table (from dry-run artifacts)
 
-``--smoke`` shrinks the simulation suites (sharing, fleet) to CI size; the
-measurement suites (coldstart, policies, kernels, ...) always do real work.
+``--smoke`` shrinks the simulation suites (sharing, fleet) to CI size (the
+scale switch is ``benchmarks.common.set_smoke`` — one definition for the
+driver and CI) and writes ``results/BENCH_smoke.json``: the canonical perf
+baseline (per-bench wall clock + headline metrics) that CI's ``bench`` job
+uploads and band-checks (``tools/ci/check_bench.py``). The measurement
+suites (coldstart, policies, kernels, ...) always do real work.
 """
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 import traceback
 
+from benchmarks.common import save_json, set_smoke
+
 BENCHES = ["coldstart", "policies", "metadata", "sharing", "fleet", "kernels",
            "roofline"]
+
+#: Version of the ``BENCH_smoke.json`` artifact layout.
+BENCH_SCHEMA_VERSION = 1
+
+
+def _headline(outs: dict) -> dict:
+    """The paper-band metrics CI guards, pulled from the bench outputs that
+    produced them (absent benches simply contribute nothing)."""
+    head: dict = {}
+    fleet = outs.get("fleet") or {}
+    if "degenerate" in fleet:
+        head["memory_saving_vs_prebaking"] = \
+            fleet["degenerate"]["memory_saving_vs_prebaking"]
+    if "page_model" in fleet:
+        head["dependency_loading_speedup"] = \
+            fleet["page_model"]["dependency_loading_speedup_paper_scale"]
+    if "azure_scale" in fleet:
+        head["azure_scale_n_invocations"] = \
+            fleet["azure_scale"]["n_invocations"]
+        head["azure_scale_wall_clock_s"] = \
+            fleet["azure_scale"]["wall_clock_s"]
+    sharing = outs.get("sharing") or {}
+    if "paper_costs" in sharing:
+        head["sharing_memory_saving_vs_prebaking"] = \
+            sharing["paper_costs"]["memory_saving_vs_prebaking"]
+    return head
 
 
 def main() -> None:
@@ -39,22 +70,35 @@ def main() -> None:
                     help="CI-sized runs for the simulation suites "
                          "(sharing, fleet); pair with --only")
     args = ap.parse_args()
-    if args.smoke:
-        os.environ["REPRO_SMOKE"] = "1"
+    set_smoke(args.smoke)
     todo = args.only.split(",") if args.only else BENCHES
 
     print("name,us_per_call,derived")
     failures = 0
+    cells: dict = {}
+    outs: dict = {}
     for name in todo:
         mod_name = f"benchmarks.bench_{name}"
         t0 = time.perf_counter()
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run()
-            print(f"# {name}: ok ({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
+            outs[name] = mod.run()
+            wall = time.perf_counter() - t0
+            cells[name] = {"ok": True, "wall_clock_s": wall}
+            print(f"# {name}: ok ({wall:.1f}s)", file=sys.stderr)
         except Exception:
             failures += 1
+            cells[name] = {"ok": False,
+                           "wall_clock_s": time.perf_counter() - t0}
             print(f"# {name}: FAILED\n{traceback.format_exc()}", file=sys.stderr)
+    if args.smoke:
+        path = save_json("BENCH_smoke", {
+            "bench_schema_version": BENCH_SCHEMA_VERSION,
+            "smoke": True,
+            "cells": cells,
+            "headline": _headline(outs),
+        })
+        print(f"# wrote {path}", file=sys.stderr)
     sys.exit(int(failures > 0))
 
 

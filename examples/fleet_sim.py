@@ -137,6 +137,34 @@ def main() -> None:
           f"{ra.cache_hits['miss']} | {ra.pages_transferred} pages moved "
           f"({ra.avg_latency_s * 1e3:.1f} ms avg)")
 
+    # --- 7. large sweeps: the parallel, resumable executor ----------------------
+    # Grid points fan out over a process pool; each validated result streams
+    # to an append-only JSONL store keyed by spec content hash, so a killed
+    # sweep resumes by skipping finished points — and serial vs parallel
+    # runs store byte-identical results (docs/API.md).
+    import tempfile
+
+    from repro.experiments.executor import run_sweep
+
+    store = os.path.join(tempfile.mkdtemp(prefix="warmswap-sweep-"),
+                         "sweep.jsonl")
+    axes = {"traces.kwargs.seed": [0, 1]}
+    report = run_sweep(spec("degenerate"), axes, smoke=True, parallel=2,
+                       store_path=store)
+    resumed = run_sweep(spec("degenerate"), axes, smoke=True,
+                        store_path=store, resume=True)
+    print(f"\nexecutor sweep ({len(report.points)} points, 2 processes) -> "
+          f"{store}")
+    for point, result in zip(report.points, report.results):
+        ws = result["methods"]["warmswap"]
+        print(f"  {point.name}: warmswap avg "
+              f"{ws['avg_latency_s'] * 1e3:.2f} ms | cold {ws['n_cold']} | "
+              f"saving {result['summary']['memory_saving_vs_prebaking']:.1%}")
+    assert resumed.n_run == 0 and resumed.n_skipped == len(report.points)
+    assert resumed.results == report.results
+    print(f"  re-run with --resume: {resumed.n_skipped} stored points "
+          f"skipped, 0 recomputed")
+
 
 if __name__ == "__main__":
     main()

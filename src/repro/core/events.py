@@ -36,7 +36,7 @@ class EventKind(IntEnum):
     KEEPALIVE_EXPIRY = 3
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class Event:
     time: float            # minutes
     kind: EventKind
@@ -44,43 +44,60 @@ class Event:
 
 
 class EventQueue:
-    """Min-heap of :class:`Event`, ordered by (time, kind, insertion seq).
+    """Min-heap of events, ordered by (time, kind, insertion seq).
 
     Payloads are never compared: the insertion sequence number is a unique
     tie-break, so arbitrary (unorderable) payload objects are fine.
+
+    Heap records are plain ``(time, kind_int, seq, payload)`` tuples — the
+    fleet engine's hot loop uses :meth:`pop_raw` (and reads :attr:`heap`
+    directly for its merge comparison) so a million-event run never
+    constructs an :class:`Event` or an ``EventKind`` per pop; :meth:`pop`
+    wraps the same record for callers that want the typed view.
     """
 
+    __slots__ = ("heap", "_seq")
+
     def __init__(self) -> None:
-        self._heap: list = []
+        #: The underlying heap list of ``(time, kind_int, seq, payload)``
+        #: records; read-only for callers (the engine peeks ``heap[0]``).
+        self.heap: list = []
         self._seq = itertools.count()
 
-    def push(self, time: float, kind: EventKind, payload: Any = None) -> None:
+    def push(self, time: float, kind: int, payload: Any = None) -> None:
         """Schedule an event.
 
         Args:
             time: firing time in simulation **minutes**.
-            kind: event type; its integer value is the equal-time tie-break
-                rank (see the module docstring).
+            kind: event type (an :class:`EventKind` or its integer value);
+                the integer is the equal-time tie-break rank (see the
+                module docstring).
             payload: opaque data handed back on :meth:`pop`; never compared.
         """
-        heapq.heappush(self._heap, (time, int(kind), next(self._seq), payload))
+        heapq.heappush(self.heap, (time, int(kind), next(self._seq), payload))
 
     def pop(self) -> Event:
         """Remove and return the earliest event (by time, then kind, then
         insertion order). Raises ``IndexError`` when empty."""
-        time, kind, _, payload = heapq.heappop(self._heap)
+        time, kind, _, payload = heapq.heappop(self.heap)
         return Event(time, EventKind(kind), payload)
+
+    def pop_raw(self) -> Tuple[float, int, int, Any]:
+        """Remove and return the earliest raw heap record
+        ``(time_minutes, kind_int, seq, payload)`` without wrapping it —
+        the allocation-free form the fleet engine's event loop consumes."""
+        return heapq.heappop(self.heap)
 
     def peek_key(self) -> Optional[Tuple[float, int]]:
         """``(time_minutes, kind_rank)`` of the earliest event, or ``None``
         when empty — the comparison key the fleet engine merges the sorted
         arrival stream against."""
-        if not self._heap:
+        if not self.heap:
             return None
-        return (self._heap[0][0], self._heap[0][1])
+        return (self.heap[0][0], self.heap[0][1])
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self.heap)
 
     def __bool__(self) -> bool:
-        return bool(self._heap)
+        return bool(self.heap)

@@ -56,7 +56,7 @@ from __future__ import annotations
 
 import copy
 from collections import deque
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -68,6 +68,13 @@ from repro.core.pool import CapacityLedger, ClusterImageCache
 from repro.core.simulator import (CostModel, latency_percentiles,
                                   method_cold_latency_s)
 from repro.core.traces import Trace
+
+# EventKind ranks as plain ints: the hot loop compares and pushes these
+# without paying an enum construction or comparison per event
+_FREE = int(EventKind.INSTANCE_FREE)
+_SPAWN = int(EventKind.PREWARM_SPAWN)
+_ARRIVAL = int(EventKind.ARRIVAL)
+_EXPIRY = int(EventKind.KEEPALIVE_EXPIRY)
 
 
 @dataclass
@@ -108,7 +115,7 @@ class FleetConfig:
                                                  # page_cost
 
 
-@dataclass
+@dataclass(slots=True)
 class _Instance:
     fn: int
     busy_until: float        # minutes; monotone — only ever advanced
@@ -120,6 +127,9 @@ class _Instance:
 
 
 class _Worker:
+    __slots__ = ("idx", "ledger", "instances", "queues", "metadata_fns",
+                 "n_served", "instance_min", "in_flight", "queued_now")
+
     def __init__(self, idx: int, capacity_bytes: Optional[int]):
         self.idx = idx
         self.ledger = CapacityLedger(capacity_bytes)
@@ -128,22 +138,36 @@ class _Worker:
         self.metadata_fns: set = set()
         self.n_served = 0
         self.instance_min = 0.0      # total warm-instance residency (minutes)
+        self.in_flight = 0           # requests currently executing; maintained
+                                     #   incrementally (begin_service +1,
+                                     #   INSTANCE_FREE -1) so placement's load
+                                     #   signal is O(1) per decision
+        self.queued_now = 0          # requests waiting in self.queues
 
     def alive(self, fn: int) -> List[_Instance]:
         """Instances of ``fn``; expiry events (not reads) prune this list."""
         return self.instances.get(fn, [])
 
     def idle_instance(self, fn: int, t: float) -> Optional[_Instance]:
-        avail = [i for i in self.alive(fn) if i.busy_until <= t]
-        return min(avail, key=lambda i: i.busy_until) if avail else None
+        """The idle instance of ``fn`` with the earliest previous completion,
+        or ``None``. Valid at the current simulation time only (events up to
+        ``t`` must have been processed)."""
+        best = None
+        for inst in self.instances.get(fn, ()):
+            if inst.busy_until <= t and (best is None
+                                         or inst.busy_until < best.busy_until):
+                best = inst
+        return best
 
-    def load(self, t: float) -> int:
-        """In-flight requests on this worker (busy, unexpired instances)."""
-        return sum(sum(1 for i in insts if i.busy_until > t)
-                   for insts in self.instances.values())
+    def load(self, t: float = 0.0) -> int:
+        """In-flight requests on this worker. O(1): the engine maintains the
+        count incrementally, which equals the number of busy instances at the
+        current simulation time (completion events at or before now have
+        already fired — the heap ranks ``INSTANCE_FREE`` ahead of arrivals)."""
+        return self.in_flight
 
     def queue_depth(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        return self.queued_now
 
 
 @dataclass
@@ -307,9 +331,7 @@ def _simulate_fleet_impl(
 
     res = FleetResult(method=method, n_invocations=0, n_cold=0, n_warm=0,
                       total_latency_s=0.0, memory_bytes=0,
-                      n_workers=fleet.n_workers,
-                      per_fn_latency={t.fn_index: 0.0 for t in traces},
-                      per_fn_invocations={t.fn_index: 0 for t in traces})
+                      n_workers=fleet.n_workers)
 
     def resident_key(fn: int) -> str:
         """What must be resident in a worker pool to cold-start ``fn`` fast."""
@@ -356,11 +378,25 @@ def _simulate_fleet_impl(
     n_req = len(all_t)
     horizon = float(all_t[-1]) if n_req else 0.0
     res.horizon_min = horizon
+    # preallocated per-request buffers, filled in place by begin_service; an
+    # unfilled (NaN) slot after the loop drains is an engine bug and raises
     samples = np.full(n_req, np.nan)
     waits = np.full(n_req, np.nan)
     events = EventQueue()
+    push = events.push
     arrival_seq = 0                    # round-robin rotates per ARRIVAL; queued
                                        #   requests must not stall the rotation
+    # hot-loop counters (folded into ``res`` after the loop): locals are
+    # cheaper than dataclass attribute updates at millions of requests
+    n_cold_c = n_warm_c = 0
+    pw_hits = pp_hits = 0              # placement warm / pool-residency hits
+    max_conc = 1
+    warm_s = cost.warm_s
+    # the base "none" policy has no arrival/completion state worth feeding and
+    # a constant keep-alive window — skip its callbacks entirely (subclasses,
+    # even ones that override nothing, take the full path)
+    trivial_policy = type(policy) is PrewarmPolicy
+    fixed_ka = policy.keep_alive_min(0, image_bytes=idle_bytes)
 
     def tier_of(w: _Worker, key: str) -> str:
         """Where ``key``'s pages would come from for a cold start on ``w``
@@ -379,37 +415,67 @@ def _simulate_fleet_impl(
         return page.transfer_blocking_s(tier_of(w, key),
                                         image_bytes=resident_bytes_of(key))
 
-    def placement_ctx(fn: int, t: float, key: str,
-                      with_warm: bool) -> "PlacementContext":
-        """All placement signals for one decision. Under the page model the
-        residency signal is the bandwidth/residency-aware transfer-cost
-        estimate (local beats remote beats source-miss); otherwise it is
-        boolean pool residency. Strategies ignore what they don't rank by."""
-        ctx = PlacementContext(
-            load=lambda w: w.load(t),
-            queue_depth=_Worker.queue_depth,
-            has_warm=(lambda w: w.idle_instance(fn, t) is not None)
-            if with_warm else None,
-            fn=fn, t_min=t, arrival_seq=arrival_seq,
-        )
+    # One PlacementContext per decision *kind*, built once and mutated in
+    # place per arrival (fn / t_min / arrival_seq are plain attribute writes);
+    # the signal closures read the current decision through ``cur``. Under the
+    # page model the residency signal is the bandwidth/residency-aware
+    # transfer-cost estimate (local beats remote beats source-miss); otherwise
+    # it is boolean pool residency. Strategies ignore what they don't rank by.
+    cur = [0, 0.0, ""]                     # fn, t (minutes), resident key
+    warm_cache: Dict[int, _Instance] = {}  # worker idx -> idle inst found by
+                                           #   the has_warm scan this decision
+
+    def _load_signal(w: _Worker) -> int:
+        return w.in_flight
+
+    def _queue_signal(w: _Worker) -> int:
+        return w.queued_now
+
+    def _has_warm_signal(w: _Worker) -> bool:
+        inst = w.idle_instance(cur[0], cur[1])
+        if inst is None:
+            return False
+        warm_cache[w.idx] = inst
+        return True
+
+    def _residency_signals() -> Dict:
         if page is not None and method != "baseline":
-            return replace(ctx, start_cost=lambda w: start_cost_s(w, key))
-        return replace(ctx, holds_image=lambda w: w.ledger.holds(key))
+            return {"start_cost": lambda w: start_cost_s(w, cur[2])}
+        return {"holds_image": lambda w: w.ledger.holds(cur[2])}
 
-    def pick_worker(fn: int, t: float) -> _Worker:
+    ctx = PlacementContext(load=_load_signal, queue_depth=_queue_signal,
+                           has_warm=_has_warm_signal, **_residency_signals())
+    single_worker = len(workers) == 1
+
+    def pick_worker(fn: int, t: float) -> Tuple[_Worker, str,
+                                                Optional[_Instance]]:
+        """The placement decision for one arrival: the chosen worker, the
+        resident key its cold start would need, and its idle warm instance
+        (``None`` when a cold start / queue wait is due). With one worker
+        every strategy must return it, so the strategy call is skipped."""
+        nonlocal pw_hits, pp_hits
         key = resident_key(fn)
-        w = strategy(workers, placement_ctx(fn, t, key, with_warm=True))
-        if w.idle_instance(fn, t) is not None:
-            res.placement_warm_hits += 1
+        if single_worker:
+            w = workers[0]
+            inst = w.idle_instance(fn, t)
+        else:
+            cur[0], cur[1], cur[2] = fn, t, key
+            warm_cache.clear()
+            ctx.fn, ctx.t_min, ctx.arrival_seq = fn, t, arrival_seq
+            w = strategy(workers, ctx)
+            inst = warm_cache.get(w.idx)
+            if inst is None:               # strategy may ignore the warm scan
+                inst = w.idle_instance(fn, t)
+        if inst is not None:
+            pw_hits += 1
         elif w.ledger.holds(key):
-            res.placement_pool_hits += 1
-        return w
+            pp_hits += 1
+        return w, key, inst
 
-    def cold_start(w: _Worker, fn: int, t: float) -> float:
+    def cold_start(w: _Worker, fn: int, key: str, t: float) -> float:
         """Admit what the cold start needs into the worker pool (and, under
         the page model, the cluster-shared tier); return its latency in
-        seconds."""
-        key = resident_key(fn)
+        seconds. ``key`` is the resident key ``pick_worker`` already derived."""
         if page is not None:
             lat = cold_start_paged(w, fn, key, t)
         else:
@@ -480,27 +546,24 @@ def _simulate_fleet_impl(
     def begin_service(w: _Worker, inst: _Instance, start: float, svc_s: float,
                       req_t: float, idx: int) -> None:
         """Run one request on ``inst`` starting at ``start`` (>= its previous
-        ``busy_until`` by construction, so busy_until only ever advances)."""
+        ``busy_until`` by construction, so busy_until only ever advances).
+        Per-request totals (latency sums, queue counts, per-function
+        breakdowns) are NOT accumulated here — they are vectorized over the
+        preallocated ``samples``/``waits`` buffers after the loop drains."""
         wait_s = (start - req_t) * 60.0
-        lat = wait_s + svc_s
-        inst.busy_until = start + svc_s / 60.0
-        inst.expires = inst.busy_until + policy.keep_alive_min(
-            inst.fn, image_bytes=idle_bytes)
+        busy_until = start + svc_s / 60.0
+        inst.busy_until = busy_until
+        expires = busy_until + (fixed_ka if trivial_policy
+                                else policy.keep_alive_min(
+                                    inst.fn, image_bytes=idle_bytes))
+        inst.expires = expires
         inst.gen += 1
-        events.push(inst.busy_until, EventKind.INSTANCE_FREE, (w, inst))
-        events.push(inst.expires, EventKind.KEEPALIVE_EXPIRY,
-                    (w, inst, inst.gen))
+        push(busy_until, _FREE, (w, inst))
+        push(expires, _EXPIRY, (w, inst, inst.gen))
         w.n_served += 1
-        res.n_invocations += 1
-        res.total_latency_s += lat
-        if wait_s > 0:
-            res.n_queued += 1
-            res.queue_delay_s += wait_s
-        samples[idx] = lat
+        w.in_flight += 1
+        samples[idx] = wait_s + svc_s
         waits[idx] = wait_s
-        fn = inst.fn
-        res.per_fn_latency[fn] = res.per_fn_latency.get(fn, 0.0) + lat
-        res.per_fn_invocations[fn] = res.per_fn_invocations.get(fn, 0) + 1
 
     def retire(w: _Worker, inst: _Instance) -> None:
         """Keep-alive expired: remove the instance, account its residency
@@ -519,10 +582,12 @@ def _simulate_fleet_impl(
             if w.alive(fn):
                 return                 # something is already warm; don't double-spawn
         # pre-warm spawns always use affinity-shaped placement (no instance
-        # is warm yet, so only the residency/transfer signal discriminates)
-        key = resident_key(fn)
-        w = place_invocation(workers, placement_ctx(fn, t, key,
-                                                    with_warm=False))
+        # is warm yet, so only the residency/transfer signal discriminates);
+        # spawns are rare, so this context is built fresh rather than shared
+        cur[2] = key = resident_key(fn)
+        w = place_invocation(workers, PlacementContext(
+            load=_load_signal, queue_depth=_queue_signal,
+            fn=fn, t_min=t, arrival_seq=arrival_seq, **_residency_signals()))
         if method != "baseline":
             admit_resident(w, key, t)
             if method == "warmswap":
@@ -535,64 +600,84 @@ def _simulate_fleet_impl(
         res.prewarm_spawns += 1
 
     def handle_arrival(t: float, fn: int, idx: int) -> None:
-        nonlocal arrival_seq
-        policy.on_arrival(fn, t)
-        w = pick_worker(fn, t)
+        nonlocal arrival_seq, n_cold_c, n_warm_c, max_conc
+        if not trivial_policy:
+            policy.on_arrival(fn, t)
+        w, key, inst = pick_worker(fn, t)
         arrival_seq += 1
-        inst = w.idle_instance(fn, t)
-        alive = w.alive(fn)
         if inst is not None:
-            res.n_warm += 1
+            n_warm_c += 1
             if inst.prewarmed:
                 res.prewarm_hits += 1
                 inst.prewarmed = False
-            begin_service(w, inst, start=t, svc_s=cost.warm_s, req_t=t, idx=idx)
-        elif alive and cap is not None and len(alive) >= cap:
-            # at the instance cap: join this worker's FIFO queue; the next
-            # instance-free event dispatches it (latency = wait + warm cost)
-            w.queues.setdefault(fn, deque()).append((t, idx))
+            begin_service(w, inst, t, warm_s, t, idx)
         else:
-            svc = cold_start(w, fn, t)
-            res.n_cold += 1
-            inst = _Instance(fn, busy_until=t, expires=t, created=t)
-            w.instances.setdefault(fn, []).append(inst)
-            n_alive = sum(len(ww.alive(fn)) for ww in workers)
-            res.max_concurrent_instances = max(res.max_concurrent_instances,
-                                               n_alive)
-            begin_service(w, inst, start=t, svc_s=svc, req_t=t, idx=idx)
-        window = policy.prewarm_after(fn, t)
-        if window is not None:
-            events.push(window[0], EventKind.PREWARM_SPAWN,
-                        (fn, window[1]))
+            alive = w.instances.get(fn)
+            if alive and cap is not None and len(alive) >= cap:
+                # at the instance cap: join this worker's FIFO queue; the next
+                # instance-free event dispatches it (latency = wait + warm cost)
+                w.queues.setdefault(fn, deque()).append((t, idx))
+                w.queued_now += 1
+            else:
+                svc = cold_start(w, fn, key, t)
+                n_cold_c += 1
+                inst = _Instance(fn, busy_until=t, expires=t, created=t)
+                if alive is None:
+                    w.instances[fn] = [inst]
+                else:
+                    alive.append(inst)
+                n_alive = sum(len(ww.alive(fn)) for ww in workers)
+                if n_alive > max_conc:
+                    max_conc = n_alive
+                begin_service(w, inst, t, svc, t, idx)
+        if not trivial_policy:
+            window = policy.prewarm_after(fn, t)
+            if window is not None:
+                push(window[0], _SPAWN, (fn, window[1]))
 
-    def handle_event(ev) -> None:
-        if ev.kind == EventKind.INSTANCE_FREE:
-            w, inst = ev.payload
-            policy.on_completion(inst.fn, ev.time)
+    def handle_event(ev_t: float, kind: int, payload) -> None:
+        nonlocal n_warm_c
+        if kind == _FREE:
+            w, inst = payload
+            w.in_flight -= 1
+            if not trivial_policy:
+                policy.on_completion(inst.fn, ev_t)
             q = w.queues.get(inst.fn)
             if q:
                 req_t, idx = q.popleft()
-                res.n_warm += 1
-                begin_service(w, inst, start=ev.time, svc_s=cost.warm_s,
-                              req_t=req_t, idx=idx)
-        elif ev.kind == EventKind.PREWARM_SPAWN:
-            fn, expire_at = ev.payload
-            spawn_prewarm(ev.time, fn, expire_at)
+                w.queued_now -= 1
+                n_warm_c += 1
+                begin_service(w, inst, ev_t, warm_s, req_t, idx)
+        elif kind == _SPAWN:
+            fn, expire_at = payload
+            spawn_prewarm(ev_t, fn, expire_at)
         else:                          # KEEPALIVE_EXPIRY
-            w, inst, gen = ev.payload
+            w, inst, gen = payload
             if inst.gen == gen:        # else: superseded by a later reuse
                 retire(w, inst)
 
     # ---------------------------------------------------------------- event loop
+    # Merge the pre-sorted arrival stream against the event-heap head. The
+    # arrival arrays are materialized as plain Python lists once — float/int
+    # extraction per numpy element is several times slower at millions of
+    # requests — and the heap head is compared field-wise (no tuple builds).
+    all_t_list = all_t.tolist()
+    all_fn_list = all_fn.tolist()
+    heap = events.heap
+    pop = events.pop_raw
     i = 0
-    while i < n_req or events:
-        key = events.peek_key()
-        if key is not None and (i >= n_req or
-                                key <= (float(all_t[i]), int(EventKind.ARRIVAL))):
-            handle_event(events.pop())
-        else:
-            handle_arrival(float(all_t[i]), int(all_fn[i]), i)
-            i += 1
+    while True:
+        if heap:
+            head = heap[0]
+            if (i >= n_req or head[0] < all_t_list[i]
+                    or (head[0] == all_t_list[i] and head[1] <= _ARRIVAL)):
+                ev = pop()
+                handle_event(ev[0], ev[1], ev[3])
+                continue
+        elif i >= n_req:
+            break
+        handle_arrival(all_t_list[i], all_fn_list[i], i)
+        i += 1
 
     if n_req and np.isnan(samples).any():
         raise RuntimeError("fleet engine dropped requests: unfilled latency "
@@ -600,6 +685,26 @@ def _simulate_fleet_impl(
     res.latency_samples_s = samples
     res.queue_wait_s = waits
     res.sample_fn = all_fn
+    # ------------------------------------------------- vectorized projections
+    # Totals, queue stats, and per-function breakdowns from the sample
+    # buffers in a few numpy passes instead of per-request accumulation.
+    res.n_invocations = n_req
+    res.n_cold = n_cold_c
+    res.n_warm = n_warm_c
+    res.total_latency_s = float(samples.sum())
+    res.n_queued = int((waits > 0).sum())
+    res.queue_delay_s = float(waits.sum())
+    res.placement_warm_hits = pw_hits
+    res.placement_pool_hits = pp_hits
+    res.max_concurrent_instances = max_conc
+    fns = np.array(sorted({t.fn_index for t in traces}), np.int64)
+    slots = np.searchsorted(fns, all_fn)
+    lat_sums = np.bincount(slots, weights=samples, minlength=len(fns)) \
+        if n_req else np.zeros(len(fns))
+    inv_counts = np.bincount(slots, minlength=len(fns)) \
+        if n_req else np.zeros(len(fns), np.int64)
+    res.per_fn_latency = {int(f): float(s) for f, s in zip(fns, lat_sums)}
+    res.per_fn_invocations = {int(f): int(c) for f, c in zip(fns, inv_counts)}
     res.evictions = sum(w.ledger.evictions for w in workers)
     res.instance_resident_min = sum(w.instance_min for w in workers)
     if cluster is not None:

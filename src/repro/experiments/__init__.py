@@ -3,6 +3,9 @@
     PYTHONPATH=src python -m repro.experiments run benchmarks/scenarios/degenerate.json
     PYTHONPATH=src python -m repro.experiments run spec.json --smoke --out out.json
     PYTHONPATH=src python -m repro.experiments sweep spec.json --axis n_workers=1,4,16
+    PYTHONPATH=src python -m repro.experiments sweep spec.json --axis traces.kwargs.seed=0,1,2,3 \\
+        --parallel 4 --store results/sweep.jsonl --resume
+    PYTHONPATH=src python -m repro.experiments report results/sweep.jsonl
     PYTHONPATH=src python -m repro.experiments validate benchmarks/scenarios/*.json
     PYTHONPATH=src python -m repro.experiments smoke benchmarks/scenarios/*.json
     PYTHONPATH=src python -m repro.experiments list
@@ -10,7 +13,11 @@
 Scenario schema, registry keys, and the result schema: ``docs/API.md``.
 The programmatic mirrors (:func:`run_file`, :func:`sweep_file`) are what
 ``benchmarks/bench_fleet.py`` drives its cells through, so the CLI and the
-benchmark suite share one code path.
+benchmark suite share one code path. Sweeps run through the parallel,
+resumable executor (:mod:`repro.experiments.executor`): ``--parallel N``
+fans grid points across a process pool, ``--store`` streams each validated
+result to an append-only JSONL store keyed by spec content hash, and
+``--resume`` skips points the store already holds.
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.scenario import (Result, Scenario, run, sweep,
                                  validate_result)
+from repro.experiments.executor import (SweepReport, run_sweep,
+                                        summarize_store)
 
 
 def run_file(path: str, *, smoke: bool = False,
@@ -68,14 +77,20 @@ def parse_axis(text: str) -> Dict[str, List[Any]]:
 
 
 def _print_result(result: Result, label: str = "") -> None:
+    _print_result_dict(result.to_dict(), label)
+
+
+def _print_result_dict(result: Mapping[str, Any], label: str = "") -> None:
+    """Print one serialized result's per-method table + summary lines (the
+    one output format; :func:`_print_result` delegates here)."""
     prefix = f"{label}: " if label else ""
-    for m, mr in result.methods.items():
-        pct = mr.latency_percentiles_s
-        print(f"{prefix}{m:9s} avg {mr.avg_latency_s * 1e3:9.2f} ms | "
-              f"p99 {pct['p99'] * 1e3:9.2f} ms | cold {mr.n_cold:6d} | "
-              f"warm {mr.n_warm:6d} | queued {mr.n_queued:5d} | "
-              f"mem {mr.memory_bytes / 1e6:8.1f} MB")
-    for k, v in result.summary.items():
+    for m, mr in result["methods"].items():
+        pct = mr["latency_percentiles_s"]
+        print(f"{prefix}{m:9s} avg {mr['avg_latency_s'] * 1e3:9.2f} ms | "
+              f"p99 {pct['p99'] * 1e3:9.2f} ms | cold {mr['n_cold']:6d} | "
+              f"warm {mr['n_warm']:6d} | queued {mr['n_queued']:5d} | "
+              f"mem {mr['memory_bytes'] / 1e6:8.1f} MB")
+    for k, v in result["summary"].items():
         print(f"{prefix}summary.{k} = {v:.4f}")
 
 
@@ -101,7 +116,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_run.add_argument("--set", action="append", default=[], metavar="PATH=V",
                        help="dotted-path override, e.g. n_workers=8")
 
-    p_sweep = sub.add_parser("sweep", help="grid-expand axes and run each cell")
+    p_sweep = sub.add_parser("sweep", help="grid-expand axes and run each cell "
+                             "(parallel + resumable via the executor)")
     p_sweep.add_argument("spec")
     p_sweep.add_argument("--axis", action="append", default=[], required=True,
                          metavar="PATH=V1,V2,...",
@@ -109,6 +125,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_sweep.add_argument("--smoke", action="store_true")
     p_sweep.add_argument("--out", default=None,
                          help="write the list of result JSONs here")
+    p_sweep.add_argument("--parallel", type=int, default=1, metavar="N",
+                         help="worker processes (default 1 = in-process); "
+                              "serial and parallel runs store identical "
+                              "results")
+    p_sweep.add_argument("--store", default=None, metavar="PATH",
+                         help="append each validated result to this JSONL "
+                              "results store (fsynced per point, keyed by "
+                              "spec content hash)")
+    p_sweep.add_argument("--resume", action="store_true",
+                         help="skip grid points already in --store (e.g. "
+                              "after a kill; a torn trailing line is "
+                              "recomputed)")
+    p_sweep.add_argument("--derive-seeds", action="store_true",
+                         help="pin each point's traces.kwargs.seed to a "
+                              "stable hash of its spec (independent "
+                              "arrivals per point, reproducibly)")
+
+    p_report = sub.add_parser(
+        "report", help="summarize a results store back into the unified "
+                       "result schema")
+    p_report.add_argument("store")
+    p_report.add_argument("--out", default=None,
+                          help="write the summary JSON here")
 
     p_val = sub.add_parser("validate", help="load + schema-check specs")
     p_val.add_argument("specs", nargs="+")
@@ -137,10 +176,41 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         axes: Dict[str, List[Any]] = {}
         for item in args.axis:
             axes.update(parse_axis(item))
-        results = sweep_file(args.spec, axes, smoke=args.smoke)
-        for r in results:
-            _print_result(r, label=r.scenario["name"])
-        _write(args.out, [r.to_dict() for r in results])
+        def progress(done, total, point, skipped):
+            verb = "skipped (stored)" if skipped else "done"
+            print(f"[{done}/{total}] {point.name}: {verb}", file=sys.stderr)
+
+        report = run_sweep(Scenario.from_file(args.spec), axes,
+                           smoke=args.smoke, parallel=args.parallel,
+                           store_path=args.store, resume=args.resume,
+                           derive_seeds=args.derive_seeds,
+                           progress=progress)
+        for point, result in zip(report.points, report.results):
+            _print_result_dict(result, label=point.name)
+        if report.n_skipped:
+            print(f"resumed: {report.n_skipped} stored point(s) skipped, "
+                  f"{report.n_run} run", file=sys.stderr)
+        _write(args.out, report.results)
+        return 0
+
+    if args.command == "report":
+        summary = summarize_store(args.store)
+        for row in summary["points"]:
+            for m in ("warmswap", "prebaking", "baseline"):
+                if m in row:
+                    mr = row[m]
+                    print(f"{row['name']}: {m:9s} "
+                          f"avg {mr['avg_latency_s'] * 1e3:9.2f} ms | "
+                          f"p99 {mr['p99_s'] * 1e3:9.2f} ms | "
+                          f"cold {mr['n_cold']:6d} | "
+                          f"mem {mr['memory_bytes'] / 1e6:8.1f} MB")
+            for k, v in row["summary"].items():
+                print(f"{row['name']}: summary.{k} = {v:.4f}")
+        print(f"{summary['n_points']} point(s) in {args.store}"
+              + (" (torn trailing line dropped)"
+                 if summary["torn_tail_dropped"] else ""),
+              file=sys.stderr)
+        _write(args.out, summary)
         return 0
 
     if args.command == "validate":

@@ -105,22 +105,54 @@ def place_invocation(
                         "kwargs, not both")
     if not workers:
         return None
-    rank = {w: i for i, w in enumerate(workers)}
-    if context.queue_depth is not None:
-        key = lambda w: (context.load(w) + context.queue_depth(w), rank[w])  # noqa: E731
-    else:
-        key = lambda w: (context.load(w), rank[w])  # noqa: E731
-    if context.has_warm is not None:
-        warm = [w for w in workers if context.has_warm(w)]
-        if warm:
-            return min(warm, key=key)
-    if context.start_cost is not None:
-        return min(workers, key=lambda w: (context.start_cost(w),) + key(w))
+    # Single-pass selection with first-minimum tie-breaks (== the historical
+    # ``min`` over ``(signal, position)`` keys, without building a rank dict
+    # and per-worker key tuples — this is the fleet engine's hottest call).
+    load, queue_depth = context.load, context.queue_depth
+    has_warm, start_cost = context.has_warm, context.start_cost
+
+    def eff_load(w):
+        return load(w) + queue_depth(w) if queue_depth is not None else load(w)
+
+    if has_warm is not None:
+        best = None
+        best_load = 0
+        for w in workers:
+            if has_warm(w):
+                l = eff_load(w)
+                if best is None or l < best_load:
+                    best, best_load = w, l
+        if best is not None:
+            return best
+    if start_cost is not None:
+        best = workers[0]
+        best_cost, best_load = start_cost(best), eff_load(best)
+        for w in workers[1:]:
+            c = start_cost(w)
+            if c > best_cost:
+                continue
+            l = eff_load(w)
+            if c < best_cost or l < best_load:
+                best, best_cost, best_load = w, c, l
+        return best
     if context.holds_image is not None:
-        holding = [w for w in workers if context.holds_image(w)]
-        if holding:
-            return min(holding, key=key)
-    return min(workers, key=key)
+        holds_image = context.holds_image
+        best = None
+        best_load = 0
+        for w in workers:
+            if holds_image(w):
+                l = eff_load(w)
+                if best is None or l < best_load:
+                    best, best_load = w, l
+        if best is not None:
+            return best
+    best = workers[0]
+    best_load = eff_load(best)
+    for w in workers[1:]:
+        l = eff_load(w)
+        if l < best_load:
+            best, best_load = w, l
+    return best
 
 
 @PLACEMENTS.register("affinity")

@@ -1,0 +1,232 @@
+"""Parallel resumable sweep executor + JSONL results store.
+
+The contracts under test (docs/API.md "Large sweeps"):
+
+  * serial and parallel runs of one grid produce **byte-identical** stores;
+  * a killed sweep (torn trailing line included) resumes by skipping every
+    completed point and recomputing only what is missing;
+  * the store refuses schema mismatches and interior corruption, and only
+    tolerates (drops + repairs) a torn *final* line;
+  * derived per-point seeds are deterministic and distinct per point.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.core.scenario import Scenario
+from repro.experiments import main as cli_main
+from repro.experiments.executor import (point_seed, resolve_points, run_sweep,
+                                        summarize_store)
+from repro.experiments.store import (CorruptStoreError, ResultStore,
+                                     StoreError, StoreSchemaError, spec_key)
+
+
+def _base() -> Scenario:
+    # single-engine + tiny horizon: each point runs in milliseconds, and the
+    # executor path (resolve -> run -> validate -> store) is fully exercised
+    return Scenario(name="exec_base", engine="single",
+                    methods=["warmswap", "prebaking"],
+                    traces={"name": "azure",
+                            "kwargs": {"n_functions": 3, "horizon_min": 300,
+                                       "seed": 0}})
+
+
+AXES = {"traces.kwargs.seed": [0, 1, 2]}
+
+
+# ---------------------------------------------------------------------------------
+# serial == parallel
+# ---------------------------------------------------------------------------------
+
+def test_serial_and_parallel_sweeps_bit_identical(tmp_path):
+    p_serial = str(tmp_path / "serial.jsonl")
+    p_par = str(tmp_path / "parallel.jsonl")
+    rs = run_sweep(_base(), AXES, store_path=p_serial)
+    rp = run_sweep(_base(), AXES, store_path=p_par, parallel=2)
+    assert rs.n_run == rp.n_run == 3
+    assert open(p_serial, "rb").read() == open(p_par, "rb").read()
+    assert rs.results == rp.results
+    # and the stored results round-trip through the store reader
+    assert [r["result"] for r in ResultStore(p_serial).records()] == rs.results
+
+
+def test_results_in_grid_order_and_headline_through_executor(tmp_path):
+    report = run_sweep(_base(), AXES, store_path=str(tmp_path / "s.jsonl"))
+    names = [p.name for p in report.points]
+    assert names == [f"exec_base[traces.kwargs.seed={s}]" for s in (0, 1, 2)]
+    for result in report.results:
+        # the 88 % headline survives the executor path (degenerate memory
+        # model: 1 shared image over 3 fns is not the 10-fn headline, but
+        # the summary key must exist and be in (0, 1))
+        assert 0.0 < result["summary"]["memory_saving_vs_prebaking"] < 1.0
+
+
+# ---------------------------------------------------------------------------------
+# resume
+# ---------------------------------------------------------------------------------
+
+def test_resume_after_kill_skips_completed_points(tmp_path):
+    full = str(tmp_path / "full.jsonl")
+    run_sweep(_base(), AXES, store_path=full)
+    full_bytes = open(full, "rb").read()
+    lines = full_bytes.split(b"\n")          # header, 3 records, trailing ""
+
+    # simulate a kill mid-append: header + first record committed, second
+    # record torn halfway through its line
+    killed = str(tmp_path / "killed.jsonl")
+    with open(killed, "wb") as f:
+        f.write(lines[0] + b"\n" + lines[1] + b"\n" + lines[2][: len(lines[2]) // 2])
+
+    report = run_sweep(_base(), AXES, store_path=killed, resume=True)
+    assert report.n_skipped == 1                 # the committed point
+    assert report.n_run == 2                     # torn + missing recomputed
+    # the repaired store holds exactly the full run's records (the torn line
+    # was truncated away, not duplicated)
+    assert ResultStore(killed).records() == ResultStore(full).records()
+    # resuming a complete store runs nothing
+    again = run_sweep(_base(), AXES, store_path=killed, resume=True)
+    assert again.n_run == 0 and again.n_skipped == 3
+    assert again.results == report.results
+
+
+def test_existing_store_without_resume_is_refused(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    run_sweep(_base(), AXES, store_path=path)
+    with pytest.raises(StoreError, match="resume"):
+        run_sweep(_base(), AXES, store_path=path)
+
+
+# ---------------------------------------------------------------------------------
+# store integrity
+# ---------------------------------------------------------------------------------
+
+def test_store_rejects_store_schema_mismatch(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    with open(path, "w") as f:
+        f.write('{"store_schema_version": 99, "result_schema_version": 1}\n')
+    with pytest.raises(StoreSchemaError, match="store_schema_version"):
+        ResultStore(path).records()
+
+
+def test_store_rejects_future_result_schema(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    with open(path, "w") as f:
+        f.write('{"store_schema_version": 1, "result_schema_version": 999}\n')
+    with pytest.raises(StoreSchemaError, match="result_schema_version"):
+        ResultStore(path).records()
+    # and the executor surfaces it rather than appending blind
+    with pytest.raises(StoreSchemaError):
+        run_sweep(_base(), AXES, store_path=path, resume=True)
+
+
+def test_store_rejects_non_header_file(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    with open(path, "w") as f:
+        f.write('{"not": "a store"}\n')
+    with pytest.raises(StoreSchemaError, match="header"):
+        ResultStore(path).records()
+
+
+def test_store_rejects_corrupt_interior_line(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    run_sweep(_base(), AXES, store_path=path)
+    lines = open(path, "rb").read().split(b"\n")
+    lines[2] = lines[2][: len(lines[2]) // 2]    # damage a MIDDLE record
+    with open(path, "wb") as f:
+        f.write(b"\n".join(lines))
+    with pytest.raises(CorruptStoreError, match="corrupt line"):
+        ResultStore(path).records()
+
+
+def test_torn_trailing_line_dropped_then_repaired_by_append(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    report = run_sweep(_base(), AXES, store_path=path)
+    with open(path, "ab") as f:
+        f.write(b'{"key": "half-written')          # no newline: torn
+    store = ResultStore(path)
+    assert [r["key"] for r in store.records()] == \
+        [p.key for p in report.points]
+    assert store.torn_tail
+    # the next append truncates the torn tail before writing
+    store.append("extra", report.results[0], name="extra")
+    records = ResultStore(path).records()
+    assert [r["key"] for r in records] == [p.key for p in report.points] + \
+        ["extra"]
+    raw = open(path, "rb").read()
+    assert b"half-written" not in raw and raw.endswith(b"\n")
+
+
+# ---------------------------------------------------------------------------------
+# keys and seeds
+# ---------------------------------------------------------------------------------
+
+def test_spec_key_is_content_hash_of_resolved_spec():
+    points = resolve_points(_base(), AXES)
+    assert len({p.key for p in points}) == 3     # distinct specs, distinct keys
+    assert all(p.key == spec_key(p.spec) for p in points)
+    # resolution is deterministic: same base + axes -> same keys
+    assert [p.key for p in resolve_points(_base(), AXES)] == \
+        [p.key for p in points]
+
+
+def test_smoke_resolution_changes_the_key():
+    base = _base()
+    base.smoke_overrides = {"traces.kwargs.horizon_min": 100}
+    full = resolve_points(base, {})
+    smoke = resolve_points(base, {}, smoke=True)
+    assert full[0].key != smoke[0].key
+    assert smoke[0].spec["traces"]["kwargs"]["horizon_min"] == 100
+
+
+def test_derived_seeds_deterministic_and_distinct():
+    axes = {"keep_alive_min": [5.0, 10.0, 20.0]}
+    pts = resolve_points(_base(), axes, derive_seeds=True)
+    seeds = [p.spec["traces"]["kwargs"]["seed"] for p in pts]
+    assert len(set(seeds)) == 3                  # independent per point
+    assert seeds == [p.spec["traces"]["kwargs"]["seed"]
+                     for p in resolve_points(_base(), axes, derive_seeds=True)]
+    # the derived seed is a function of the spec WITHOUT its previous seed
+    spec = pts[0].spec
+    reseeded = json.loads(json.dumps(spec))
+    reseeded["traces"]["kwargs"]["seed"] = 12345
+    assert point_seed(spec) == point_seed(reseeded)
+
+
+# ---------------------------------------------------------------------------------
+# CLI + report
+# ---------------------------------------------------------------------------------
+
+def test_cli_sweep_store_resume_and_report(tmp_path, capsys):
+    spec_path = str(tmp_path / "base.json")
+    with open(spec_path, "w") as f:
+        f.write(_base().to_json())
+    store_path = str(tmp_path / "cli.jsonl")
+    assert cli_main(["sweep", spec_path, "--axis", "traces.kwargs.seed=0,1",
+                     "--parallel", "2", "--store", store_path]) == 0
+    assert cli_main(["sweep", spec_path, "--axis", "traces.kwargs.seed=0,1",
+                     "--store", store_path, "--resume"]) == 0
+    out = capsys.readouterr().out
+    assert "memory_saving_vs_prebaking" in out
+    report_out = str(tmp_path / "report.json")
+    assert cli_main(["report", store_path, "--out", report_out]) == 0
+    summary = json.load(open(report_out))
+    assert summary["n_points"] == 2
+    assert len(summary["results"]) == 2
+
+    summary2 = summarize_store(store_path)
+    assert [r["key"] for r in summary2["points"]] == \
+        [r["key"] for r in summary["points"]]
+
+
+def test_resume_requires_store(tmp_path):
+    # programmatic and CLI callers both hit the run_sweep guard
+    with pytest.raises(StoreError, match="resume"):
+        run_sweep(_base(), AXES, resume=True)
+    spec_path = str(tmp_path / "base.json")
+    with open(spec_path, "w") as f:
+        f.write(_base().to_json())
+    with pytest.raises(ValueError, match="--resume needs --store"):
+        cli_main(["sweep", spec_path, "--axis", "n_workers=1", "--resume"])

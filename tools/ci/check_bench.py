@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Perf-baseline band check over the canonical ``BENCH_smoke.json`` artifact
+(written by ``python -m benchmarks.run --smoke``). CI's ``bench`` job fails
+when a headline metric leaves the paper's bands or the production-scale
+replay regresses:
+
+  * memory saving vs Prebaking: 88 % +- 5 points (paper §4.5 headline);
+  * dependency-loading speedup: inside the paper's 2.2-3.2x band;
+  * azure_scale: >= 1M invocations simulated end-to-end in < 60 s.
+
+Runs locally too:
+
+    python tools/ci/check_bench.py [results/BENCH_smoke.json]
+"""
+import json
+import sys
+
+SAVING_BAND = (0.83, 0.93)       # 88 % +- 5 points
+SPEEDUP_BAND = (2.2, 3.2)        # paper Table 2 / Fig. 5 band
+SCALE_FLOOR = 1_000_000          # azure_scale invocation floor
+SCALE_BUDGET_S = 60.0            # azure_scale wall-clock budget (CI hardware)
+
+
+def main(path="results/BENCH_smoke.json"):
+    data = json.load(open(path))
+    assert data.get("bench_schema_version") == 1, \
+        f"unknown bench schema in {path}"
+    failed_cells = [n for n, c in data["cells"].items() if not c.get("ok")]
+    assert not failed_cells, f"bench cells failed: {failed_cells}"
+    head = data["headline"]
+
+    saving = head["memory_saving_vs_prebaking"]
+    assert SAVING_BAND[0] <= saving <= SAVING_BAND[1], \
+        f"memory saving {saving:.3f} outside {SAVING_BAND} (paper: 0.88)"
+    sharing_saving = head.get("sharing_memory_saving_vs_prebaking", saving)
+    assert SAVING_BAND[0] <= sharing_saving <= SAVING_BAND[1], \
+        f"sharing-bench saving {sharing_saving:.3f} outside {SAVING_BAND}"
+    speedup = head["dependency_loading_speedup"]
+    assert SPEEDUP_BAND[0] <= speedup <= SPEEDUP_BAND[1], \
+        f"dependency-loading speedup {speedup:.2f}x outside {SPEEDUP_BAND}"
+
+    n_inv = head["azure_scale_n_invocations"]
+    wall = head["azure_scale_wall_clock_s"]
+    assert n_inv >= SCALE_FLOOR, \
+        f"azure_scale simulated only {n_inv} invocations (< {SCALE_FLOOR})"
+    assert wall < SCALE_BUDGET_S, \
+        f"azure_scale took {wall:.1f}s (budget {SCALE_BUDGET_S}s) — " \
+        f"fleet-engine hot path regressed"
+
+    print(f"ok: saving {saving:.1%} (band {SAVING_BAND}), "
+          f"dep speedup {speedup:.2f}x (band {SPEEDUP_BAND}), "
+          f"azure_scale {n_inv:,} invocations in {wall:.1f}s "
+          f"(< {SCALE_BUDGET_S:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

@@ -1,0 +1,35 @@
+#!/usr/bin/env python
+"""Markdown link check: fails on dangling intra-repo links in README.md and
+docs/*.md. Runs locally and in CI's docs job.
+
+    python tools/ci/check_doc_links.py [README.md docs/*.md ...]
+"""
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def main(*files):
+    files = list(files) or ["README.md"] + sorted(glob.glob("docs/*.md"))
+    dangling = []
+    for f in files:
+        base = os.path.dirname(f)
+        for target in LINK_RE.findall(open(f).read()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+            if not os.path.exists(path):
+                dangling.append((f, target))
+    if dangling:
+        for f, t in dangling:
+            print(f"dangling link in {f}: {t}")
+        return 1
+    print(f"ok: {len(files)} files link-checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

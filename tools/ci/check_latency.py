@@ -1,0 +1,36 @@
+#!/usr/bin/env python
+"""Latency sanity over the fleet bench artifact: every latency-shaped number
+must be finite and non-negative (a NaN or negative latency means the queueing
+model broke). Runs locally and in CI's smoke job.
+
+    python tools/ci/check_latency.py [results/bench_fleet.json]
+"""
+import json
+import math
+import sys
+
+
+def walk(node, path=""):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from walk(v, f"{path}/{k}")
+    elif isinstance(node, (int, float)):
+        yield path, node
+
+
+def main(path="results/bench_fleet.json"):
+    data = json.load(open(path))
+    bad = [(p, v) for p, v in walk(data)
+           if ("latency" in p or "queue_delay" in p or p.rsplit("/", 1)[-1]
+               in ("p50", "p95", "p99", "mean", "max"))
+           and (not math.isfinite(v) or v < 0)]
+    if bad:
+        print("NaN/negative latency values:", bad[:20])
+        return 1
+    pcts = [v for p, v in walk(data) if p.endswith("/p99")]
+    print(f"ok: {len(pcts)} p99 values in {path}, all finite and non-negative")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

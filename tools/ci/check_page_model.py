@@ -1,0 +1,36 @@
+#!/usr/bin/env python
+"""Page-model band asserts over the fleet bench artifact: HotSwap latency
+strictly between warm and cold at every image size, dependency-loading
+speedup inside the paper's 2.2-3.2x band, and the shared-tier cache
+footprint saving in (0, 1). Runs locally and in CI's smoke job.
+
+    python tools/ci/check_page_model.py [results/bench_fleet.json]
+"""
+import json
+import math
+import sys
+
+
+def main(path="results/bench_fleet.json"):
+    page = json.load(open(path))["page_model"]
+    sizes = page["latency_vs_image_size"]
+    assert sizes, "latency_vs_image_size cell is empty"
+    for label, cell in sizes.items():
+        vals = [cell["warm_s"], cell["hotswap_s"], cell["cold_s"],
+                cell["dependency_loading_speedup"]]
+        assert all(math.isfinite(v) for v in vals), f"NaN in {label}"
+        assert cell["warm_s"] < cell["hotswap_s"] < cell["cold_s"], \
+            f"HotSwap latency not strictly between warm and cold: {label}"
+    sp = page["dependency_loading_speedup_paper_scale"]
+    assert 2.2 <= sp <= 3.2, f"dep-loading speedup {sp} outside 2.2-3.2x"
+    fp = page["cache_footprint"]
+    assert math.isfinite(fp["saving_fraction"])
+    assert 0.0 < fp["saving_fraction"] < 1.0
+    assert fp["hotswap_shared_peak_mb"] < fp["prebaking_shared_peak_mb"]
+    print(f"ok: {len(sizes)} image sizes, dep speedup {sp:.2f}x, "
+          f"cache-footprint saving {fp['saving_fraction']:.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))
