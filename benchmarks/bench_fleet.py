@@ -246,6 +246,32 @@ def run() -> Dict:
          f"{n_inv} invocations x {len(res_scale.raw)} methods in "
          f"{scale_wall_s:.1f}s ({total_req / max(scale_wall_s, 1e-9):,.0f} req/s)")
 
+    # ------------------------------------------------- vectorized-engine scale
+    # The azure_scale_xl scenario is the vectorized engine's headline: a
+    # ≥10M-invocation two-week fleet through engine='fleet_vec' (bit-identical
+    # to the event engine by the differential suite), an order of magnitude
+    # past where the Python hot path tops out. Same smoke policy as
+    # azure_scale — full invocation count, trimmed method list — and the wall
+    # clock is band-checked against the 60s CI budget by check_bench.py.
+    t0 = time.perf_counter()
+    res_xl = run_file(scenario_path("azure_scale_xl"), smoke=smoke)
+    xl_wall_s = time.perf_counter() - t0
+    n_inv_xl = max(r.n_invocations for r in res_xl.raw.values())
+    assert n_inv_xl >= 10_000_000, \
+        f"azure_scale_xl must exercise >= 10M invocations, got {n_inv_xl}"
+    cell = scenario_cell(res_xl, "azure_scale_xl")
+    total_req_xl = sum(r.n_invocations for r in res_xl.raw.values())
+    out["azure_scale_xl"] = {
+        "n_invocations": n_inv_xl,
+        "n_methods": len(res_xl.raw),
+        "wall_clock_s": xl_wall_s,
+        "invocations_per_s": total_req_xl / max(xl_wall_s, 1e-9),
+        "methods": cell,
+    }
+    emit("fleet/azure_scale_xl", xl_wall_s * 1e6,
+         f"{n_inv_xl} invocations x {len(res_xl.raw)} methods in "
+         f"{xl_wall_s:.1f}s ({total_req_xl / max(xl_wall_s, 1e-9):,.0f} req/s)")
+
     # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
     for r in sweep_file(scenario_path("placement"),

@@ -55,6 +55,11 @@ def _headline(outs: dict) -> dict:
             fleet["azure_scale"]["n_invocations"]
         head["azure_scale_wall_clock_s"] = \
             fleet["azure_scale"]["wall_clock_s"]
+    if "azure_scale_xl" in fleet:
+        head["azure_scale_xl_n_invocations"] = \
+            fleet["azure_scale_xl"]["n_invocations"]
+        head["azure_scale_xl_wall_clock_s"] = \
+            fleet["azure_scale_xl"]["wall_clock_s"]
     sharing = outs.get("sharing") or {}
     if "paper_costs" in sharing:
         head["sharing_memory_saving_vs_prebaking"] = \

@@ -236,6 +236,28 @@ def _make_policy(cfg: FleetConfig) -> PrewarmPolicy:
     return PREWARM_POLICIES.build(cfg.prewarm)
 
 
+def _seed_home_residents(method: str, workers: List["_Worker"],
+                         fn_image: Dict[int, int], images: List[int],
+                         admit: Callable[["_Worker", str], None]) -> None:
+    """Provider pre-build phase (paper Fig. 4b), shared by the event engine
+    and the vectorized engine (``core/fleet_vec.py``) so home-worker seeding
+    can never drift between them: WarmSwap builds each live image once on its
+    home worker (image rank modulo fleet size) and registers every function's
+    metadata there; Prebaking snapshots every function upfront on the same
+    home; Baseline holds nothing. ``admit`` is the engine's resident-admission
+    hook (worker pool + cluster tier at t=0)."""
+    if method == "warmswap":
+        for rank, img in enumerate(images):
+            admit(workers[rank % len(workers)], f"img:{img}")
+        for fn, img in fn_image.items():
+            home = workers[images.index(img) % len(workers)]
+            home.metadata_fns.add(fn)
+    elif method == "prebaking":
+        for fn, img in fn_image.items():
+            home = workers[images.index(img) % len(workers)]
+            admit(home, f"snap:{fn}")
+
+
 def simulate_fleet(
     traces: List[Trace],
     method: str,                       # 'warmswap' | 'prebaking' | 'baseline'
@@ -353,17 +375,8 @@ def _simulate_fleet_impl(
     # Provider pre-builds residents on home workers (paper Fig. 4b): WarmSwap
     # builds each live image once; Prebaking snapshots every function upfront
     # (the paper keeps prebaked snapshots in RAM, §4.5). Baseline holds nothing.
-    if method == "warmswap":
-        for rank, img in enumerate(images):
-            home = workers[rank % len(workers)]
-            admit_resident(home, f"img:{img}", 0.0)
-        for fn, img in fn_image.items():
-            home = workers[images.index(img) % len(workers)]
-            home.metadata_fns.add(fn)
-    elif method == "prebaking":
-        for fn, img in fn_image.items():
-            home = workers[images.index(img) % len(workers)]
-            admit_resident(home, f"snap:{fn}", 0.0)
+    _seed_home_residents(method, workers, fn_image, images,
+                         lambda w, key: admit_resident(w, key, 0.0))
     note_peak()
 
     # ------------------------------------------------------------- arrival stream

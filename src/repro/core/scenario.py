@@ -64,8 +64,10 @@ RESULT_SCHEMA_VERSION = 1
 
 #: The paper's three start methods — the only valid ``Scenario.methods``.
 METHODS = ("warmswap", "prebaking", "baseline")
-#: Valid ``Scenario.engine`` values.
-ENGINES = ("single", "fleet")
+#: Valid ``Scenario.engine`` values. ``fleet_vec`` is the vectorized batch
+#: engine (``core/fleet_vec.py``) — bit-identical results to ``fleet``, with
+#: an exact event-engine fallback outside its fast-path domain.
+ENGINES = ("single", "fleet", "fleet_vec")
 
 
 @dataclass
@@ -122,7 +124,7 @@ class Scenario:
     name: str = "scenario"
     description: str = ""
     schema_version: int = SCHEMA_VERSION
-    engine: str = "fleet"                    # 'fleet' | 'single'
+    engine: str = "fleet"                    # 'fleet' | 'fleet_vec' | 'single'
     methods: List[str] = field(default_factory=_default_methods)
     traces: ComponentSpec = field(
         default_factory=lambda: ComponentSpec("azure", {"n_functions": 10}))
@@ -552,8 +554,13 @@ def run(scenario: Scenario, *, smoke: bool = False,
                 page_cost=page,
                 shared_cache_bytes=scn.shared_cache_bytes,
             )
+        if scn.engine == "fleet_vec":
+            from repro.core.fleet_vec import simulate_fleet_vec
+            impl = simulate_fleet_vec
+        else:
+            impl = _simulate_fleet_impl
         for m in scn.methods:
-            raw[m] = _simulate_fleet_impl(traces, m, cost, fleet_cfg)
+            raw[m] = impl(traces, m, cost, fleet_cfg)
 
     summary: Dict[str, float] = {}
     if "warmswap" in raw and "prebaking" in raw:

@@ -59,7 +59,8 @@ def poisson_arrivals(rate_per_min: float, horizon_min: float,
 
 
 def poisson_arrivals_batched(rates: Sequence[float], horizon_min: float,
-                             rng: np.random.Generator) -> List[np.ndarray]:
+                             rng: np.random.Generator, *,
+                             sorted: bool = True) -> List[np.ndarray]:
     """Per-function Poisson arrival arrays for ALL rates in three vectorized
     draws (counts, then one uniform fill, then per-segment sorts) instead of
     two RNG calls per function — the production-scale path for traces with
@@ -70,13 +71,21 @@ def poisson_arrivals_batched(rates: Sequence[float], horizon_min: float,
     before any arrival times), so for one seed the batched and unbatched
     arrival values differ; each is reproducible on its own. See
     docs/SIMULATION.md.
+
+    ``sorted=False`` skips the per-segment sorts and returns each function's
+    arrivals in raw draw order — the same multiset of times, cheaper at
+    production scale. Both fleet engines normalize with one global stable
+    argsort over the merged stream, so they accept either ordering and
+    produce identical results for it (pinned by tests/test_traces_order.py);
+    ``Trace.arrivals_min`` is documented as sorted, so unsorted arrays are
+    for engine-level consumers only.
     """
     rates = np.asarray(rates, np.float64)
     counts = rng.poisson(np.maximum(rates, 0.0) * horizon_min)
     counts[rates <= 0] = 0
     flat = rng.uniform(0.0, horizon_min, size=int(counts.sum()))
-    return [np.sort(seg)
-            for seg in np.split(flat, np.cumsum(counts)[:-1])]
+    segs = np.split(flat, np.cumsum(counts)[:-1])
+    return [np.sort(seg) for seg in segs] if sorted else segs
 
 
 @TRACE_GENERATORS.register("azure")

@@ -1,0 +1,81 @@
+"""Golden replay regression: a tiny canonical trace (tests/data/
+golden_trace.json) with its expected per-request latency/wait vectors
+(tests/data/golden_expected.json), asserted EXACTLY — `==` on every float —
+by BOTH fleet engines.  Any change to event ordering, keep-alive arithmetic,
+queue discipline, or the vectorized solver that shifts a single sample by one
+ULP fails here with a pinpointed request index.
+
+The fixture stores the arrival floats verbatim (JSON round-trips doubles
+exactly), plus the generator kwargs that reproduce them, so the fixture can
+be regenerated deliberately — never silently.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+from repro.core.fleet_vec import simulate_fleet_vec
+from repro.core.simulator import CostModel
+from repro.core.traces import Trace, generate_fleet_traces
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _load():
+    doc = json.load(open(os.path.join(DATA, "golden_trace.json")))
+    exp = json.load(open(os.path.join(DATA, "golden_expected.json")))
+    traces = [Trace(d["fn_index"], d["rate_per_min"],
+                    np.array(d["arrivals_min"], np.float64),
+                    image_id=d["image_id"])
+              for d in doc["traces"]]
+    return doc, exp, traces
+
+
+def _check(r, want, label):
+    for name in ("latency_samples_s", "queue_wait_s", "sample_fn"):
+        got = getattr(r, name)
+        ref = np.array(want[name], got.dtype)
+        bad = np.flatnonzero(got != ref)
+        assert bad.size == 0, \
+            f"{label}: {name} differs at request {bad[0]}: " \
+            f"{got[bad[0]]!r} != {ref[bad[0]]!r}"
+    assert (r.n_cold, r.n_warm, r.n_queued) == \
+        (want["n_cold"], want["n_warm"], want["n_queued"]), label
+    assert r.total_latency_s == want["total_latency_s"], label
+    assert r.memory_bytes == want["memory_bytes"], label
+    assert r.instance_resident_min == want["instance_resident_min"], label
+
+
+@pytest.mark.parametrize("engine", ["fleet", "fleet_vec"])
+@pytest.mark.parametrize("method", ["warmswap", "prebaking", "baseline"])
+def test_golden_replay(engine, method):
+    doc, exp, traces = _load()
+    cost = CostModel.paper_table2()
+    fc = FleetConfig(**doc["fleet"])
+    impl = simulate_fleet_vec if engine == "fleet_vec" else _simulate_fleet_impl
+    r = impl(traces, method, cost, fc)
+    _check(r, exp["methods"][method], f"{engine}/{method}")
+
+
+def test_golden_fixture_regenerates_from_kwargs():
+    """The stored arrivals are exactly what the generator kwargs produce —
+    the fixture documents its own provenance and stays regenerable."""
+    doc, _, traces = _load()
+    regen = generate_fleet_traces(**doc["generator_kwargs"])
+    assert len(regen) == len(traces)
+    for a, b in zip(regen, traces):
+        assert (a.fn_index, a.image_id) == (b.fn_index, b.image_id)
+        assert a.rate_per_min == b.rate_per_min
+        assert np.array_equal(a.arrivals_min, b.arrivals_min)
+
+
+def test_golden_exercises_queueing():
+    """The fixture stays meaningful: it must include cold starts AND queued
+    requests, else a queue-discipline regression would pass unnoticed."""
+    _, exp, _ = _load()
+    for method, want in exp["methods"].items():
+        assert want["n_cold"] >= 3, method
+        assert want["n_queued"] >= 1, method
+        assert any(w > 0 for w in want["queue_wait_s"]), method

@@ -1,0 +1,151 @@
+"""Property tests for the simulation core's load-bearing invariants:
+
+  * the event heap (core/events.py) is a TOTAL order over (time, kind,
+    insertion seq) — ties at one timestamp resolve by kind rank, and within
+    one (time, kind) bucket strictly FIFO;
+  * per-function service starts are monotone under cap=1 (busy_until only
+    moves forward — the Lindley recursion);
+  * queue delays are never negative and every latency sample is wait +
+    service, in BOTH fleet engines.
+
+Runs under real `hypothesis` when installed (one CI tier-1 leg installs it);
+otherwise tests/conftest.py substitutes the deterministic seeded-fuzz shim
+(tests/_hypothesis_fallback.py) with the same API surface.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import Event, EventKind, EventQueue
+from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+from repro.core.fleet_vec import simulate_fleet_vec
+from repro.core.simulator import CostModel
+from repro.core.traces import generate_fleet_traces
+
+CM = CostModel.paper_table2()
+
+#: Few distinct timestamps on purpose: ties are the interesting case.
+_TIMES = st.sampled_from([0.0, 0.5, 1.0, 1.0 + 2**-40, 2.0, 7.25])
+_KINDS = st.sampled_from([EventKind.INSTANCE_FREE, EventKind.PREWARM_SPAWN,
+                          EventKind.ARRIVAL, EventKind.KEEPALIVE_EXPIRY])
+
+
+@st.composite
+def _event_batches(draw):
+    n = draw(st.integers(0, 40))
+    return [(draw(_TIMES), draw(_KINDS)) for _ in range(n)]
+
+
+@st.composite
+def _fleet_cases(draw):
+    return {
+        "n_functions": draw(st.integers(1, 8)),
+        "n_images": draw(st.integers(1, 3)),
+        "horizon_min": draw(st.sampled_from([60.0, 240.0, 720.0])),
+        "total_rate_per_min": draw(st.floats(0.5, 20.0)),
+        "seed": draw(st.integers(0, 10_000)),
+        "method": draw(st.sampled_from(["warmswap", "prebaking", "baseline"])),
+        "cap": draw(st.sampled_from([None, 1, 2])),
+        "keep_alive_min": draw(st.floats(0.5, 20.0)),
+    }
+
+
+def _run_case(case, impl):
+    traces = generate_fleet_traces(
+        n_functions=case["n_functions"], horizon_min=case["horizon_min"],
+        seed=case["seed"], n_images=case["n_images"], rate_model="zipf",
+        total_rate_per_min=case["total_rate_per_min"])
+    fc = FleetConfig(n_workers=1, max_instances_per_fn=case["cap"],
+                     keep_alive_min=case["keep_alive_min"])
+    return traces, impl(traces, case["method"], CM, fc)
+
+
+# ---------------------------------------------------------------------------------
+# Event heap: total order
+# ---------------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(_event_batches())
+def test_event_heap_total_order(batch):
+    """Pops come out sorted by (time, kind) with strict FIFO inside each
+    (time, kind) bucket — the payload tags recover insertion order."""
+    q = EventQueue()
+    for i, (t, k) in enumerate(batch):
+        q.push(t, k, payload=i)
+    assert len(q) == len(batch)
+    popped = []
+    while q:
+        assert q.peek_key() == (q.heap[0][0], q.heap[0][1])
+        t, k, _, tag = q.pop_raw()
+        popped.append((t, k, tag))
+    keys = [(t, k) for t, k, _ in popped]
+    assert keys == sorted(keys), "heap violated (time, kind) order"
+    for (t1, k1, g1), (t2, k2, g2) in zip(popped, popped[1:]):
+        if (t1, k1) == (t2, k2):
+            assert g1 < g2, "FIFO broken within a (time, kind) bucket"
+    assert sorted(g for _, _, g in popped) == list(range(len(batch)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(_TIMES, _KINDS)
+def test_event_pop_wraps_typed_view(t, k):
+    q = EventQueue()
+    q.push(t, k, payload="p")
+    ev = q.pop()
+    assert ev == Event(t, EventKind(k), "p")
+    assert isinstance(ev.kind, EventKind)
+
+
+def test_event_kind_ranks_are_the_documented_tiebreak():
+    """The rank values ARE the semantics; renumbering them silently reorders
+    same-instant events (free before spawn before arrival before expiry)."""
+    assert (EventKind.INSTANCE_FREE < EventKind.PREWARM_SPAWN
+            < EventKind.ARRIVAL < EventKind.KEEPALIVE_EXPIRY)
+    assert [EventKind.INSTANCE_FREE, EventKind.PREWARM_SPAWN,
+            EventKind.ARRIVAL, EventKind.KEEPALIVE_EXPIRY] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------------
+# Engine invariants: Lindley waits, service-start monotonicity
+# ---------------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(_fleet_cases())
+def test_queue_delays_never_negative_both_engines(case):
+    for impl in (_simulate_fleet_impl, simulate_fleet_vec):
+        _, r = _run_case(case, impl)
+        assert (r.queue_wait_s >= 0.0).all(), impl.__name__
+        assert (r.latency_samples_s >= r.queue_wait_s).all(), impl.__name__
+        assert not np.isnan(r.latency_samples_s).any(), impl.__name__
+        assert r.n_queued == int((r.queue_wait_s > 0).sum()), impl.__name__
+        assert r.total_latency_s == float(r.latency_samples_s.sum())
+        assert r.queue_delay_s == float(r.queue_wait_s.sum())
+        # every sample decomposes as wait + one of the method's two service
+        # times (warm or cold — no page model in these cases), up to the
+        # float error of reconstructing svc = sample - wait
+        svc = r.latency_samples_s - r.queue_wait_s
+        assert (svc > 0.0).all(), impl.__name__
+        assert len(np.unique(np.round(svc, 6))) <= 2, impl.__name__
+
+
+@settings(max_examples=25, deadline=None)
+@given(_fleet_cases())
+def test_service_starts_monotone_per_fn_cap1(case):
+    """busy_until only moves forward: with a single worker and cap=1, each
+    function's instance serves FIFO, so reconstructed service starts
+    (arrival + wait) are nondecreasing per function — in both engines."""
+    case = dict(case, cap=1)
+    for impl in (_simulate_fleet_impl, simulate_fleet_vec):
+        traces, r = _run_case(case, impl)
+        all_t = np.concatenate([t.arrivals_min for t in traces]) \
+            if traces else np.empty(0)
+        all_fn = np.concatenate(
+            [np.full(len(t.arrivals_min), t.fn_index) for t in traces]) \
+            if traces else np.empty(0, np.int64)
+        order = np.argsort(all_t, kind="stable")
+        t_sorted, fn_sorted = all_t[order], all_fn[order]
+        assert np.array_equal(fn_sorted, r.sample_fn)
+        starts = t_sorted + r.queue_wait_s / 60.0
+        for fn in np.unique(fn_sorted):
+            s = starts[fn_sorted == fn]
+            assert (np.diff(s) >= -1e-9).all(), \
+                f"{impl.__name__}: fn {fn} service starts went backwards"

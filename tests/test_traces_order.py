@@ -1,0 +1,101 @@
+"""Pins the RNG stream interleaving of ``poisson_arrivals_batched`` vs the
+per-function ``poisson_arrivals`` loop, and the ``sorted=`` normalization
+knob.  The two draw modes are DIFFERENT deterministic streams for one seed
+(batched draws all counts before any arrival times); each must stay exactly
+reproducible, because checked-in scenario specs and the golden fixtures pin
+results under one of them.  Both fleet engines normalize arrival order with
+one global stable argsort, so ``sorted=False`` arrays (same multiset, raw
+draw order) must produce bit-identical results.
+"""
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+from repro.core.fleet_vec import simulate_fleet_vec
+from repro.core.simulator import CostModel
+from repro.core.traces import (Trace, generate_fleet_traces, poisson_arrivals,
+                               poisson_arrivals_batched)
+
+CM = CostModel.paper_table2()
+RATES = [2.0, 0.0, 5.5, 0.75]
+HORIZON = 100.0
+SEED = 42
+
+
+def test_batched_interleaving_pinned():
+    """Batched mode draws ALL counts, then ONE uniform fill, then sorts each
+    segment — exactly this, nothing else. A reimplementation that interleaves
+    differently changes every downstream per-seed artifact."""
+    got = poisson_arrivals_batched(RATES, HORIZON, np.random.default_rng(SEED))
+    rng = np.random.default_rng(SEED)
+    counts = rng.poisson(np.maximum(np.asarray(RATES), 0.0) * HORIZON)
+    counts[np.asarray(RATES) <= 0] = 0
+    flat = rng.uniform(0.0, HORIZON, size=int(counts.sum()))
+    want = [np.sort(s) for s in np.split(flat, np.cumsum(counts)[:-1])]
+    assert len(got) == len(want) == len(RATES)
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w)
+    assert len(got[1]) == 0                    # zero-rate fn stays empty
+
+
+def test_per_fn_interleaving_pinned():
+    """The unbatched path is two RNG calls per function, in function order —
+    the legacy stream every pre-batching artifact was pinned against."""
+    rng = np.random.default_rng(SEED)
+    got = [poisson_arrivals(r, HORIZON, rng) for r in RATES]
+    rng = np.random.default_rng(SEED)
+    want = []
+    for r in RATES:
+        if r <= 0:
+            want.append(np.empty((0,), np.float64))
+            continue
+        n = rng.poisson(r * HORIZON)
+        want.append(np.sort(rng.uniform(0.0, HORIZON, size=n)))
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w)
+
+
+def test_batched_and_per_fn_streams_differ_but_match_statistically():
+    """One seed, two modes: different values (the documented interleaving
+    difference), same counts — nobody should 'fix' one to equal the other."""
+    batched = poisson_arrivals_batched(RATES, HORIZON,
+                                       np.random.default_rng(SEED))
+    rng = np.random.default_rng(SEED)
+    per_fn = [poisson_arrivals(r, HORIZON, rng) for r in RATES]
+    assert any(len(b) != len(p) or not np.array_equal(b, p)
+               for b, p in zip(batched, per_fn))
+
+
+def test_sorted_false_same_multiset_unsorted():
+    srt = poisson_arrivals_batched(RATES, HORIZON, np.random.default_rng(SEED))
+    raw = poisson_arrivals_batched(RATES, HORIZON, np.random.default_rng(SEED),
+                                   sorted=False)
+    assert any(len(r) > 1 and not np.array_equal(r, np.sort(r)) for r in raw), \
+        "sorted=False returned already-sorted segments — knob is dead"
+    for s, r in zip(srt, raw):
+        assert np.array_equal(s, np.sort(r))   # same multiset per function
+
+
+@pytest.mark.parametrize("engine", ["fleet", "fleet_vec"])
+def test_engines_normalize_arrival_order(engine):
+    """Both engines globally stable-argsort the merged stream, so feeding
+    raw-draw-order arrivals is bit-identical to feeding sorted ones."""
+    traces = generate_fleet_traces(n_functions=6, horizon_min=300.0, seed=9,
+                                   n_images=2, rate_model="zipf",
+                                   total_rate_per_min=8.0)
+    rng = np.random.default_rng(3)
+    shuffled = []
+    for t in traces:
+        arr = t.arrivals_min.copy()
+        rng.shuffle(arr)
+        shuffled.append(Trace(t.fn_index, t.rate_per_min, arr,
+                              image_id=t.image_id))
+    impl = simulate_fleet_vec if engine == "fleet_vec" else _simulate_fleet_impl
+    for method in ("warmswap", "baseline"):
+        a = impl(traces, method, CM, FleetConfig(n_workers=2))
+        b = impl(shuffled, method, CM, FleetConfig(n_workers=2))
+        assert np.array_equal(a.latency_samples_s, b.latency_samples_s)
+        assert np.array_equal(a.queue_wait_s, b.queue_wait_s)
+        assert a.total_latency_s == b.total_latency_s
+        assert (a.n_cold, a.n_warm, a.n_queued) == \
+            (b.n_cold, b.n_warm, b.n_queued)

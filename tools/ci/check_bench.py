@@ -6,7 +6,9 @@ replay regresses:
 
   * memory saving vs Prebaking: 88 % +- 5 points (paper §4.5 headline);
   * dependency-loading speedup: inside the paper's 2.2-3.2x band;
-  * azure_scale: >= 1M invocations simulated end-to-end in < 60 s.
+  * azure_scale: >= 1M invocations simulated end-to-end in < 60 s;
+  * azure_scale_xl: >= 10M invocations through the vectorized engine
+    (``engine='fleet_vec'``) in < 60 s.
 
 Runs locally too:
 
@@ -19,6 +21,8 @@ SAVING_BAND = (0.83, 0.93)       # 88 % +- 5 points
 SPEEDUP_BAND = (2.2, 3.2)        # paper Table 2 / Fig. 5 band
 SCALE_FLOOR = 1_000_000          # azure_scale invocation floor
 SCALE_BUDGET_S = 60.0            # azure_scale wall-clock budget (CI hardware)
+SCALE_XL_FLOOR = 10_000_000      # azure_scale_xl invocation floor (fleet_vec)
+SCALE_XL_BUDGET_S = 60.0         # azure_scale_xl wall-clock budget
 
 
 def main(path="results/BENCH_smoke.json"):
@@ -47,10 +51,21 @@ def main(path="results/BENCH_smoke.json"):
         f"azure_scale took {wall:.1f}s (budget {SCALE_BUDGET_S}s) — " \
         f"fleet-engine hot path regressed"
 
+    n_inv_xl = head["azure_scale_xl_n_invocations"]
+    wall_xl = head["azure_scale_xl_wall_clock_s"]
+    assert n_inv_xl >= SCALE_XL_FLOOR, \
+        f"azure_scale_xl simulated only {n_inv_xl} invocations " \
+        f"(< {SCALE_XL_FLOOR})"
+    assert wall_xl < SCALE_XL_BUDGET_S, \
+        f"azure_scale_xl took {wall_xl:.1f}s (budget {SCALE_XL_BUDGET_S}s) — " \
+        f"vectorized engine (fleet_vec) hot path regressed"
+
     print(f"ok: saving {saving:.1%} (band {SAVING_BAND}), "
           f"dep speedup {speedup:.2f}x (band {SPEEDUP_BAND}), "
           f"azure_scale {n_inv:,} invocations in {wall:.1f}s "
-          f"(< {SCALE_BUDGET_S:.0f}s)")
+          f"(< {SCALE_BUDGET_S:.0f}s), "
+          f"azure_scale_xl {n_inv_xl:,} invocations in {wall_xl:.1f}s "
+          f"(< {SCALE_XL_BUDGET_S:.0f}s)")
     return 0
 
 
