@@ -9,6 +9,7 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 import tempfile
+import zlib
 
 from repro.core import (
     ColdStartConfig,
@@ -38,7 +39,8 @@ def main() -> None:
     w = wl.WORKLOADS["cnn_serving"]
     for tenant in ("tenant-a", "tenant-b"):
         registry.register(tenant, image_id,
-                          wl._head_builder(image_id, seed=hash(tenant) % 100),
+                          wl._head_builder(image_id,
+                                           seed=zlib.crc32(tenant.encode()) % 100),
                           w.handler_fn, base_params_builder=builder,
                           write_baseline_checkpoint=True)
 

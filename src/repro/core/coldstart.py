@@ -77,6 +77,8 @@ class FunctionInstance:
         self.params = params
         self.handler_weights = handler_weights
         self.execs = execs
+        # Live-side instance age for keep-alive; never enters simulated
+        # results.  # repro-lint: allow[wall-clock]
         self.started_at = time.monotonic()
 
     def invoke(self, request: Any):

@@ -220,9 +220,10 @@ def _get_scan_fn() -> Optional[Callable]:
             # is float64, so flip it on locally for trace + execution
             with enable_x64():
                 return body(tp, *consts)
-        _SCAN_FN.append(call)
+        # Process-wide jit cache: compile the scan body once per process.
+        _SCAN_FN.append(call)     # repro-lint: allow[module-mutable]
     except Exception:
-        _SCAN_FN.append(None)
+        _SCAN_FN.append(None)     # repro-lint: allow[module-mutable]
     return _SCAN_FN[0]
 
 
@@ -254,6 +255,8 @@ def _solve_group_scan(t_g, gl, warm_s, cold_s, wm, cold60, ka,
         recs.append((float(exp2[e]), float(start[e]),
                      0 if queued[e] else 2, gl[e],
                      float(t_g[c0]), gl[c0]))
+    # Diagnostics counter, reset per simulate_fleet_vec call; never feeds
+    # results.  # repro-lint: allow[module-mutable]
     SCAN_STATS["groups"] += 1
     return n_cold, L - n_cold - n_disp, n_disp, recs
 
@@ -608,7 +611,7 @@ def simulate_fleet_vec(traces: List[Trace], method: str, cost: CostModel,
     forces the ``jax.lax.scan`` path on/off (default: the
     ``REPRO_FLEET_VEC_SCAN=1`` env knob; cap=1 groups only)."""
     fleet = fleet if fleet is not None else FleetConfig()
-    SCAN_STATS["groups"] = 0
+    SCAN_STATS["groups"] = 0      # repro-lint: allow[module-mutable]
     if fast_path_reason(traces, method, cost, fleet) is not None:
         return _simulate_fleet_impl(traces, method, cost, fleet)
     use_scan = _scan_enabled() if scan is None else scan

@@ -59,6 +59,7 @@ class LiveDependencyImage:
         self.treedef = treedef
         self.executables = executables or {}   # compile-cache: key -> compiled fn
         self.refcount = 0
+        # Live-manager LRU clock.  # repro-lint: allow[wall-clock]
         self.last_used = time.monotonic()
 
     # -- sizes -------------------------------------------------------------------
@@ -138,7 +139,8 @@ def build_image(
     h.update(str(table.n_pages).encode())
     md = ImageMetadata(
         image_id=image_id, arch_name=arch_name, dtype=dtype, page_table=table,
-        treedef_repr=str(treedef), created_at=time.time(),
+        # Provenance timestamp on the live image, not a simulated quantity.
+        treedef_repr=str(treedef), created_at=time.time(),  # repro-lint: allow[wall-clock]
         content_hash=h.hexdigest()[:16],
         compile_keys=tuple(sorted((executables or {}).keys())),
     )

@@ -284,16 +284,20 @@ class DependencyManager:
         # latency/bandwidth mutations across managers
         self.link = link if link is not None else LinkModel()
         self.page_size = page_size
-        self._images: Dict[str, LiveDependencyImage] = {}
-        self._ledger = CapacityLedger(capacity_bytes)
-        self._on_disk: Dict[str, bool] = {}
-        self._builders: Dict[str, Callable[[], Any]] = {}
-        self._arch_names: Dict[str, str] = {}
-        self._executables: Dict[str, Dict[str, Any]] = {}
-        self._treedefs: Dict[str, Any] = {}
-        self._pinned: set = set()
+        # Shared manager state below is annotated for repro-lint's
+        # lock-discipline checker (docs/ANALYSIS.md): every access outside
+        # __init__ must sit inside `with self._lock` (or a method declared
+        # `# requires-lock: _lock`), which CI verifies statically.
+        self._images: Dict[str, LiveDependencyImage] = {}   # guarded-by: _lock
+        self._ledger = CapacityLedger(capacity_bytes)       # guarded-by: _lock
+        self._on_disk: Dict[str, bool] = {}                 # guarded-by: _lock
+        self._builders: Dict[str, Callable[[], Any]] = {}   # guarded-by: _lock
+        self._arch_names: Dict[str, str] = {}               # guarded-by: _lock
+        self._executables: Dict[str, Dict[str, Any]] = {}   # guarded-by: _lock
+        self._treedefs: Dict[str, Any] = {}                 # guarded-by: _lock
+        self._pinned: set = set()                           # guarded-by: _lock
         self._lock = threading.RLock()
-        self.stats = PoolStats()
+        self.stats = PoolStats()                            # guarded-by: _lock
 
     # ------------------------------------------------------------------ registry
     def register_image(
@@ -317,7 +321,8 @@ class DependencyManager:
 
     def has_live(self, image_id: str) -> bool:
         """True if ``image_id`` is currently resident in the RAM tier."""
-        return image_id in self._images
+        with self._lock:
+            return image_id in self._images
 
     def live_image_bytes(self, image_id: str) -> Optional[int]:
         """Page-store size (bytes) of a LIVE image, or ``None`` when the
@@ -329,7 +334,8 @@ class DependencyManager:
 
     def known(self, image_id: str) -> bool:
         """True if a builder for ``image_id`` has been registered."""
-        return image_id in self._builders
+        with self._lock:
+            return image_id in self._builders
 
     # ------------------------------------------------------------------ build/evict
     def _ensure_live(self, image_id: str) -> LiveDependencyImage:
@@ -337,6 +343,8 @@ class DependencyManager:
             if image_id in self._images:
                 self.stats.hits += 1
                 img = self._images[image_id]
+                # LRU recency clock for the live manager tier — not part of
+                # any simulated result.  # repro-lint: allow[wall-clock]
                 img.last_used = time.monotonic()
                 self._ledger.touch(image_id, img.last_used)
                 return img
@@ -359,7 +367,7 @@ class DependencyManager:
             self._admit(img)
             return img
 
-    def _admit(self, img: LiveDependencyImage) -> None:
+    def _admit(self, img: LiveDependencyImage) -> None:  # requires-lock: _lock
         image_id = img.metadata.image_id
         evicted = self._ledger.admit(image_id, img.image_bytes, img.last_used,
                                      pinned=image_id in self._pinned)
@@ -373,7 +381,7 @@ class DependencyManager:
             self._ledger.evict(image_id)
             self._spill(image_id)
 
-    def _spill(self, image_id: str) -> None:
+    def _spill(self, image_id: str) -> None:  # requires-lock: _lock
         img = self._images.pop(image_id, None)
         if img is None:
             return
@@ -394,6 +402,7 @@ class DependencyManager:
         img = self._ensure_live(image_id)
         with self._lock:
             img.refcount += 1
+            # Live-manager LRU clock.  # repro-lint: allow[wall-clock]
             img.last_used = time.monotonic()
             self._ledger.acquire(image_id)
             self._ledger.touch(image_id, img.last_used)
@@ -428,15 +437,18 @@ class DependencyManager:
 
     # ------------------------------------------------------------------ accounting
     def pool_bytes(self) -> int:
-        return sum(im.image_bytes for im in self._images.values())
+        with self._lock:
+            return sum(im.image_bytes for im in self._images.values())
 
     def metadata_bytes(self) -> int:
-        return sum(im.metadata_bytes for im in self._images.values())
+        with self._lock:
+            return sum(im.metadata_bytes for im in self._images.values())
 
     def summary(self) -> Dict[str, Any]:
-        return {
-            "live_images": sorted(self._images.keys()),
-            "pool_bytes": self.pool_bytes(),
-            "metadata_bytes": self.metadata_bytes(),
-            "stats": self.stats.__dict__,
-        }
+        with self._lock:
+            return {
+                "live_images": sorted(self._images.keys()),
+                "pool_bytes": self.pool_bytes(),
+                "metadata_bytes": self.metadata_bytes(),
+                "stats": self.stats.__dict__,
+            }

@@ -16,6 +16,7 @@ Serving side — :class:`ReplicaSet`:
 from __future__ import annotations
 
 import math
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -142,24 +143,33 @@ class ReplicaSet:
         self.cfg = cfg
         self.make_engine = make_engine
         self.scheduler = FleetScheduler()
-        self.replicas: Dict[str, Any] = {}
-        self.events: List[RecoveryEvent] = []
+        # kill()/recover() may race with a supervisor thread driving _spawn;
+        # membership and the recovery log are lock-guarded (repro-lint
+        # verifies the discipline statically — see docs/ANALYSIS.md).
+        self._lock = threading.Lock()
+        self.replicas: Dict[str, Any] = {}       # guarded-by: _lock
+        self.events: List[RecoveryEvent] = []    # guarded-by: _lock
         for i in range(n_replicas):
             self._spawn(f"replica-{i}", method="warmswap")
 
     def _spawn(self, name: str, method: str) -> float:
+        # Engine bring-up (build/restore + compile) happens outside the lock:
+        # it is the slow path being measured and touches no shared state.
         t0 = time.perf_counter()
-        self.replicas[name] = self.make_engine(self.manager, self.image_id,
-                                               self.cfg, method)
+        engine = self.make_engine(self.manager, self.image_id,
+                                  self.cfg, method)
         dt = time.perf_counter() - t0
-        self.scheduler.register_replica(name)
-        self.events.append(RecoveryEvent(name, method, dt))
+        with self._lock:
+            self.replicas[name] = engine
+            self.scheduler.register_replica(name)
+            self.events.append(RecoveryEvent(name, method, dt))
         return dt
 
     def kill(self, name: str) -> None:
         """Simulated node failure."""
-        self.replicas.pop(name, None)
-        self.scheduler.remove_replica(name)
+        with self._lock:
+            self.replicas.pop(name, None)
+            self.scheduler.remove_replica(name)
 
     def recover(self, name: str, method: str = "warmswap") -> float:
         """Replace a failed replica; returns bring-up seconds. 'warmswap' re-warms

@@ -2,6 +2,13 @@ import importlib.util
 import os
 import sys
 
+# tests/test_analysis_*.py and tests/test_ci_checks.py import the repo-root
+# `tools` package; `python -m pytest` from the root already has cwd on
+# sys.path, this keeps bare `pytest` / other cwds working too.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
 # Smoke tests and benches must see the single real device; ONLY the dry-run launcher
 # forces 512 host devices (and it does so in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

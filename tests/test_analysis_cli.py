@@ -1,0 +1,120 @@
+"""repro-lint CLI: baseline diff workflow (grandfathered vs new), the JSON
+artifact, exit codes, and fingerprint stability under line churn."""
+import json
+import textwrap
+
+from tools.analysis import diff_baseline, load_baseline
+from tools.analysis.__main__ import main
+from tools.analysis.findings import Finding
+
+VIOLATION = textwrap.dedent("""
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = {}          # guarded-by: _lock
+
+        def peek(self, key):
+            return self.items.get(key)
+""")
+
+
+def test_clean_file_exits_zero(tmp_path, capsys):
+    p = tmp_path / "clean.py"
+    p.write_text("x = 1\n")
+    assert main([str(p), "--no-baseline"]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_new_finding_exits_one_and_renders(tmp_path, capsys):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION)
+    assert main([str(p), "--no-baseline", "--fix-suggestions"]) == 1
+    out = capsys.readouterr().out
+    assert "lock-discipline/unguarded-access" in out
+    assert "fix:" in out
+
+
+def test_baseline_grandfathers_then_new_copy_fails(tmp_path, capsys):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION)
+    bl = tmp_path / "baseline.json"
+
+    assert main([str(p), "--baseline", str(bl), "--write-baseline"]) == 0
+    assert len(load_baseline(str(bl))) == 1
+
+    # grandfathered: same violation passes against the baseline
+    assert main([str(p), "--baseline", str(bl)]) == 0
+
+    # a second violation appearing next to the grandfathered one is new
+    # (count-limited duplicates are covered in test_diff_baseline_count_limited)
+    p.write_text(VIOLATION + textwrap.dedent("""
+    class Pool2:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = {}          # guarded-by: _lock
+
+        def peek(self, key):
+            return self.items.get(key)
+"""))
+    capsys.readouterr()
+    assert main([str(p), "--baseline", str(bl)]) == 1
+    assert "1 baselined, 1 new" in capsys.readouterr().out
+
+
+def test_missing_baseline_file_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "absent.json")) == {}
+
+
+def test_json_artifact_shape(tmp_path):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION)
+    out = tmp_path / "findings.json"
+    assert main([str(p), "--no-baseline", "--json", str(out)]) == 1
+    data = json.loads(out.read_text())
+    assert data["analysis_schema_version"] == 1
+    assert data["n_findings"] == data["n_new"] == 1
+    assert data["n_baselined"] == 0
+    f = data["findings"][0]
+    assert f["rule"] == "unguarded-access"
+    assert f["fingerprint"] in data["new"]
+
+
+def test_unknown_checker_exits_two(tmp_path):
+    p = tmp_path / "clean.py"
+    p.write_text("x = 1\n")
+    assert main([str(p), "--no-baseline", "--checkers", "bogus"]) == 2
+
+
+def test_checker_subset_runs_only_selected(tmp_path):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION)
+    assert main([str(p), "--no-baseline",
+                 "--checkers", "shared-state"]) == 0
+
+
+def test_syntax_error_is_a_finding(tmp_path, capsys):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    assert main([str(p), "--no-baseline"]) == 1
+    assert "parse/syntax-error" in capsys.readouterr().out
+
+
+def test_fingerprint_survives_line_churn():
+    a = Finding("c", "r", "p.py", 10, 0, "m", scope="Pool.peek",
+                snippet="return self.items.get(key)")
+    b = Finding("c", "r", "p.py", 99, 4, "m", scope="Pool.peek",
+                snippet="  return   self.items.get(key)")
+    moved = Finding("c", "r", "p.py", 10, 0, "m", scope="Pool.other",
+                    snippet="return self.items.get(key)")
+    assert a.fingerprint == b.fingerprint      # line/col/whitespace-free
+    assert a.fingerprint != moved.fingerprint  # scope is part of identity
+
+
+def test_diff_baseline_count_limited():
+    f = Finding("c", "r", "p.py", 1, 0, "m", snippet="s")
+    g = Finding("c", "r", "p.py", 2, 0, "m", snippet="s")  # same fingerprint
+    new, old = diff_baseline([f, g], {f.fingerprint: 1})
+    assert [x.line for x in old] == [1]
+    assert [x.line for x in new] == [2]

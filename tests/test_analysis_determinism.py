@@ -1,0 +1,134 @@
+"""repro-lint determinism checker: each rule flags a seeded violation and
+stays quiet on the sanctioned/deterministic twin (docs/ANALYSIS.md)."""
+import textwrap
+
+from tools.analysis import determinism
+from tools.analysis.base import SourceFile
+
+SCOPED = "src/repro/core/_fixture.py"
+
+
+def parse(tmp_path, code, rel=SCOPED):
+    p = tmp_path / "fixture.py"
+    p.write_text(textwrap.dedent(code))
+    src = SourceFile.parse(str(p))
+    src.rel = rel  # place the tmp fixture inside the checker's scope
+    return src
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def test_unseeded_global_rng_flagged(tmp_path):
+    src = parse(tmp_path, """
+        import numpy as np
+        import random
+
+        def draw():
+            a = np.random.rand(3)
+            b = random.random()
+            return a, b
+    """)
+    assert rules(determinism.check(src)) == ["unseeded-rng", "unseeded-rng"]
+
+
+def test_seeded_generators_clean_unseeded_factory_flagged(tmp_path):
+    src = parse(tmp_path, """
+        import numpy as np
+        import random
+
+        def good(seed):
+            rng = np.random.default_rng(seed)
+            r = random.Random(seed)
+            return rng.normal(), r.random()
+
+        def bad():
+            return np.random.default_rng().normal()
+    """)
+    found = determinism.check(src)
+    assert rules(found) == ["unseeded-rng"]
+    assert found[0].scope == "bad"
+
+
+def test_wall_clock_flagged_interval_timers_sanctioned(tmp_path):
+    src = parse(tmp_path, """
+        import time
+        import datetime
+
+        def stamp():
+            t0 = time.perf_counter()      # sanctioned interval timer
+            now = time.time()
+            mono = time.monotonic()
+            today = datetime.datetime.now()
+            return now, mono, today, time.perf_counter() - t0
+    """)
+    assert rules(determinism.check(src)) == ["wall-clock"] * 3
+
+
+def test_wall_clock_pragma_suppresses(tmp_path):
+    src = parse(tmp_path, """
+        import time
+
+        def lru_touch(img):
+            # live-manager clock  # repro-lint: allow[wall-clock]
+            img.last_used = time.monotonic()
+    """)
+    assert determinism.check(src) == []
+
+
+def test_hash_randomization_flagged(tmp_path):
+    src = parse(tmp_path, """
+        def seed_for(tenant):
+            return hash(tenant) % 100
+    """)
+    assert rules(determinism.check(src)) == ["hash-randomization"]
+
+
+def test_set_iteration_flagged_sorted_clean(tmp_path):
+    src = parse(tmp_path, """
+        def render(names, sep):
+            live = set(names)
+            for n in live:
+                print(n)
+            joined = sep.join(live)
+            ordered = sorted(live)      # deterministic: not flagged
+            return joined, ordered
+    """)
+    assert rules(determinism.check(src)) == ["set-iteration", "set-iteration"]
+
+
+def test_environ_read_flagged_outside_entry_points(tmp_path):
+    src = parse(tmp_path, """
+        import os
+
+        def knob():
+            return os.environ.get("REPRO_SECRET_KNOB", "0")
+
+        def knob2():
+            return os.environ["REPRO_SECRET_KNOB"]
+
+        def knob3():
+            return os.getenv("REPRO_SECRET_KNOB")
+    """)
+    assert rules(determinism.check(src)) == ["environ-read"] * 3
+
+
+def test_environ_sanctioned_entry_point_clean(tmp_path):
+    src = parse(tmp_path, """
+        import os
+
+        def smoke_mode():
+            return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    """, rel="benchmarks/common.py")
+    assert determinism.check(src) == []
+
+
+def test_out_of_scope_file_skipped(tmp_path):
+    src = parse(tmp_path, """
+        import time
+
+        def live_side():
+            return time.time()
+    """, rel="src/repro/serving/_fixture.py")
+    assert determinism.check(src) == []

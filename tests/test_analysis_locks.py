@@ -1,0 +1,157 @@
+"""repro-lint lock-discipline checker: guarded-by/requires-lock grammar on a
+minimal fixture, the PR-2 guarded-attribute race shape as a regression, and
+the real annotated classes staying clean."""
+import os
+import textwrap
+
+from tools.analysis import locks
+from tools.analysis.base import REPO_ROOT, SourceFile
+
+
+def parse(tmp_path, code):
+    p = tmp_path / "fixture.py"
+    p.write_text(textwrap.dedent(code))
+    return SourceFile.parse(str(p))
+
+
+GUARDED_CLASS = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = {}          # guarded-by: _lock
+            self.evictions = 0       # guarded-by: _lock
+            self.items["seed"] = 1   # __init__ is exempt
+
+        def _drop(self, key):        # requires-lock: _lock
+            self.items.pop(key, None)
+            self.evictions += 1
+
+        def locked_get(self, key):
+            with self._lock:
+                return self.items.get(key)
+
+        def locked_drop(self, key):
+            with self._lock:
+                self._drop(key)
+"""
+
+
+def test_clean_guarded_class_passes(tmp_path):
+    src = parse(tmp_path, GUARDED_CLASS)
+    assert locks.check(src) == []
+
+
+LEAKY_CLASS = """
+    class Leaky:
+        def __init__(self):
+            import threading
+            self._lock = threading.Lock()
+            self.items = {}          # guarded-by: _lock
+            self.evictions = 0       # guarded-by: _lock
+
+        def _drop(self, key):        # requires-lock: _lock
+            self.items.pop(key, None)
+
+        def peek(self, key):
+            return self.items.get(key)
+
+        def reset(self):
+            self.evictions = 0
+
+        def drop(self, key):
+            self._drop(key)
+"""
+
+
+def test_unguarded_read_flagged(tmp_path):
+    src = parse(tmp_path, LEAKY_CLASS)
+    found = {f.scope: f for f in locks.check(src)}
+    f = found["Leaky.peek"]
+    assert f.rule == "unguarded-access"
+    assert "'self.items'" in f.message
+    assert f.message.startswith("read")
+
+
+def test_unguarded_write_flagged_as_write(tmp_path):
+    src = parse(tmp_path, LEAKY_CLASS)
+    found = {f.scope: f for f in locks.check(src)}
+    f = found["Leaky.reset"]
+    assert f.rule == "unguarded-access"
+    assert f.message.startswith("write")
+
+
+def test_unlocked_call_to_requires_lock_helper_flagged(tmp_path):
+    src = parse(tmp_path, LEAKY_CLASS)
+    found = {f.scope: f for f in locks.check(src)}
+    # the contract says the *call site* is the bug: it must hold the lock
+    assert found["Leaky.drop"].rule == "unlocked-call"
+    assert "_drop" in found["Leaky.drop"].message
+
+
+def test_requires_lock_helper_may_call_requires_lock_helper(tmp_path):
+    src = parse(tmp_path, """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = {}          # guarded-by: _lock
+
+        def _spill(self, key):       # requires-lock: _lock
+            self.items.pop(key, None)
+
+        def _admit(self, key):       # requires-lock: _lock
+            self._spill(key)
+            self.items[key] = 1
+    """)
+    assert locks.check(src) == []
+
+
+def test_pr2_bulk_restore_race_shape_regression(tmp_path):
+    """The PR-2 race: restore bookkeeping guarded on the slow path but read
+    bare on the fast path, so two threads could both miss and double-fetch."""
+    src = parse(tmp_path, """
+    import threading
+
+    class RestoreSession:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._fetched = set()      # guarded-by: _lock
+
+        def fetch_bulk(self, pages):
+            with self._lock:
+                todo = [p for p in pages if p not in self._fetched]
+                self._fetched.update(todo)
+            return todo
+
+        def fetch_on_demand(self, page):
+            if page in self._fetched:      # the race: unlocked check
+                return None
+            self._fetched.add(page)        # and unlocked insert
+            return page
+    """)
+    found = locks.check(src)
+    assert [f.rule for f in found] == ["unguarded-access", "unguarded-access"]
+    assert {f.scope for f in found} == {"RestoreSession.fetch_on_demand"}
+
+
+def test_annotated_repo_classes_stay_clean():
+    for rel in ("src/repro/core/pool.py",
+                "src/repro/runtime/fault_tolerance.py"):
+        src = SourceFile.parse(os.path.join(REPO_ROOT, rel))
+        assert "guarded-by:" in src.text, rel  # annotations present
+        assert locks.check(src) == [], rel
+
+
+def test_files_without_annotations_skipped(tmp_path):
+    src = parse(tmp_path, """
+    class Plain:
+        def __init__(self):
+            self.items = {}
+
+        def get(self, k):
+            return self.items.get(k)
+    """)
+    assert locks.check(src) == []

@@ -1,0 +1,130 @@
+"""repro-lint shared-state checker: the PR-1 (shared mutable default) and
+PR-4 (stale/loop-variable closure capture) bug classes on seeded fixtures,
+plus the attribute-store false-positive regression."""
+import textwrap
+
+from tools.analysis import shared_state
+from tools.analysis.base import SourceFile
+
+SCOPED = "src/repro/core/_fixture.py"
+
+
+def parse(tmp_path, code, rel=SCOPED):
+    p = tmp_path / "fixture.py"
+    p.write_text(textwrap.dedent(code))
+    src = SourceFile.parse(str(p))
+    src.rel = rel
+    return src
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def test_mutable_default_flagged(tmp_path):
+    src = parse(tmp_path, """
+        def collect(x, acc=[]):
+            acc.append(x)
+            return acc
+
+        def config(opts={}):
+            return opts
+
+        def tags(*, seen=set()):
+            return seen
+    """)
+    assert rules(shared_state.check(src)) == ["mutable-default"] * 3
+
+
+def test_none_default_clean(tmp_path):
+    src = parse(tmp_path, """
+        def collect(x, acc=None):
+            acc = [] if acc is None else acc
+            acc.append(x)
+            return acc
+    """)
+    assert shared_state.check(src) == []
+
+
+def test_module_mutable_flagged_and_pragma_sanctions(tmp_path):
+    src = parse(tmp_path, """
+        CACHE = {}
+        STATS = {"hits": 0}
+
+        def remember(k, v):
+            CACHE[k] = v
+
+        def count():
+            STATS["hits"] += 1    # repro-lint: allow[module-mutable]
+    """)
+    found = shared_state.check(src)
+    assert rules(found) == ["module-mutable"]
+    assert "CACHE" in found[0].message
+
+
+def test_loop_closure_flagged_immediate_consumers_clean(tmp_path):
+    src = parse(tmp_path, """
+        def build(workers):
+            picks = []
+            for w in workers:
+                picks.append(lambda: w.load)          # late binding: bug
+            ranked = sorted(workers, key=lambda w: w.load)   # consumed now
+            bound = [(lambda w=w: w.load) for w in workers]  # default-bound
+            return picks, ranked, bound
+    """)
+    found = shared_state.check(src)
+    assert rules(found) == ["loop-closure"]
+    assert "'w'" in found[0].message or "['w']" in found[0].message
+
+
+def test_pr4_stale_capture_shape_regression(tmp_path):
+    """The PR-4 shape: a closure reads a local that the enclosing function
+    rebinds afterwards, so the counter hook silently saw the new object."""
+    src = parse(tmp_path, """
+        def run(specs):
+            pool = make_pool(specs)
+
+            def on_hit(fn_id):
+                pool.hits[fn_id] += 1
+
+            pool = rebuild(pool)     # rebinds: on_hit now sees this one
+            return drive(specs, on_hit)
+    """)
+    found = shared_state.check(src)
+    assert rules(found) == ["stale-capture"]
+    assert "'pool'" in found[0].message or "['pool']" in found[0].message
+
+
+def test_attribute_and_subscript_stores_are_not_rebinds(tmp_path):
+    """Regression: mutating an object (res.x = ..., d[k] = ...) after the
+    closure is fine — only *rebinding the name* makes the capture stale."""
+    src = parse(tmp_path, """
+        def run(res, table):
+            def report():
+                return res.total, table
+
+            res.total = 41
+            table["done"] = True
+            return report
+    """)
+    assert shared_state.check(src) == []
+
+
+def test_rebind_before_closure_is_clean(tmp_path):
+    src = parse(tmp_path, """
+        def run(specs):
+            pool = make_pool(specs)
+            pool = rebuild(pool)
+
+            def on_hit(fn_id):
+                pool.hits[fn_id] += 1
+
+            return drive(specs, on_hit)
+    """)
+    assert shared_state.check(src) == []
+
+
+def test_out_of_scope_file_skipped(tmp_path):
+    src = parse(tmp_path, "def f(x=[]):\n    return x\n",
+                rel="docs/_fixture.py")
+    assert shared_state.check(src) == []

@@ -1,0 +1,112 @@
+"""repro-lint spec/registry cross-validator: a stale scenario fixture (renamed
+component, extra kwarg, missing required arg) is caught without running a
+simulation, and every checked-in benchmarks/scenarios spec stays clean."""
+import glob
+import json
+import os
+
+from tools.analysis import specs
+from tools.analysis.base import REPO_ROOT
+
+
+def valid_spec():
+    return {
+        "name": "fixture",
+        "schema_version": 1,
+        "engine": "fleet",
+        "methods": ["warmswap"],
+        "traces": {"name": "fleet",
+                   "kwargs": {"n_functions": 4, "horizon_min": 60.0,
+                              "seed": 0}},
+        "cost": {"name": "paper_table2", "kwargs": {}},
+        "prewarm": {"name": "none", "kwargs": {}},
+        "placement": {"name": "affinity", "kwargs": {}},
+    }
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def test_valid_spec_clean():
+    assert specs.check_spec(valid_spec(), "x.json") == []
+
+
+def test_renamed_component_unknown_with_did_you_mean():
+    spec = valid_spec()
+    spec["traces"]["name"] = "fleet_traces"      # renamed out from under us
+    found = specs.check_spec(spec, "x.json")
+    assert rules(found) == ["unknown-component"]
+    assert "'fleet'" in found[0].message         # did-you-mean
+    assert found[0].scope == "traces.fleet_traces"
+
+
+def test_extra_kwarg_unknown_with_did_you_mean():
+    spec = valid_spec()
+    spec["prewarm"] = {"name": "none",
+                       "kwargs": {"keep_alive_mins": 15.0}}   # typo'd kwarg
+    found = specs.check_spec(spec, "x.json")
+    assert rules(found) == ["unknown-kwarg"]
+    assert "keep_alive_min" in found[0].message  # did-you-mean
+
+def test_missing_required_arg():
+    spec = valid_spec()
+    del spec["traces"]["kwargs"]["n_functions"]
+    found = specs.check_spec(spec, "x.json")
+    assert rules(found) == ["missing-required-arg"]
+    assert "'n_functions'" in found[0].message
+
+
+def test_runtime_injected_kwargs_not_required():
+    # page_cost factories take the resolved CostModel as 'cost' — injected by
+    # run(), so the spec must NOT be asked to provide it
+    spec = valid_spec()
+    spec["page_cost"] = {"name": "degenerate", "kwargs": {}}
+    assert specs.check_spec(spec, "x.json") == []
+
+
+def test_malformed_component_shape_invalid_spec():
+    spec = valid_spec()
+    spec["cost"] = {"nm": "paper_table2"}
+    found = specs.check_spec(spec, "x.json")
+    assert rules(found) == ["invalid-spec"]
+
+
+def test_string_component_form_accepted():
+    spec = valid_spec()
+    spec["cost"] = "paper_table2"
+    assert specs.check_spec(spec, "x.json") == []
+
+
+def test_non_scenario_json_passes_through(tmp_path):
+    p = tmp_path / "artifact.json"
+    p.write_text(json.dumps({"headline": {"speedup": 2.7}}))
+    assert specs.check_file(str(p)) == []
+
+
+def test_unreadable_json_invalid_spec(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{not json")
+    assert rules(specs.check_file(str(p))) == ["invalid-spec"]
+
+
+def test_stale_spec_fixture_file_roundtrip(tmp_path):
+    """One file carrying all three rot shapes at once (the checker keeps
+    going past the first bad component)."""
+    spec = valid_spec()
+    spec["traces"]["name"] = "fleet_traces"
+    spec["prewarm"] = {"name": "none", "kwargs": {"keep_alive_mins": 1.0}}
+    spec["placement"] = {"name": "affinty", "kwargs": {}}
+    p = tmp_path / "stale.json"
+    p.write_text(json.dumps(spec))
+    found = specs.check_file(str(p))
+    assert rules(found) == ["unknown-component", "unknown-component",
+                            "unknown-kwarg"]
+
+
+def test_all_checked_in_scenarios_clean():
+    paths = sorted(glob.glob(
+        os.path.join(REPO_ROOT, "benchmarks", "scenarios", "*.json")))
+    assert paths, "no checked-in scenario specs found"
+    for p in paths:
+        assert specs.check_file(p) == [], p

@@ -1,0 +1,144 @@
+"""Unit tests for the tools/ci gate scripts: each main() passes on a crafted
+good artifact and fails (raises or returns 1) on a crafted bad one, so the CI
+gates themselves are regression-tested without running a bench."""
+import json
+import math
+
+import pytest
+
+from tools.ci import check_bench, check_doc_links, check_latency, \
+    check_page_model
+
+
+# ------------------------------------------------------------ check_bench
+
+def bench_artifact(**overrides):
+    head = {
+        "memory_saving_vs_prebaking": 0.88,
+        "sharing_memory_saving_vs_prebaking": 0.88,
+        "dependency_loading_speedup": 2.7,
+        "azure_scale_n_invocations": 1_200_000,
+        "azure_scale_wall_clock_s": 30.0,
+        "azure_scale_xl_n_invocations": 12_000_000,
+        "azure_scale_xl_wall_clock_s": 40.0,
+    }
+    head.update(overrides)
+    return {"bench_schema_version": 1,
+            "cells": {"coldstart": {"ok": True}},
+            "headline": head}
+
+
+def write(tmp_path, data, name="artifact.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+def test_check_bench_passes_in_band(tmp_path):
+    assert check_bench.main(write(tmp_path, bench_artifact())) == 0
+
+
+@pytest.mark.parametrize("overrides,fragment", [
+    ({"memory_saving_vs_prebaking": 0.50}, "memory saving"),
+    ({"dependency_loading_speedup": 5.0}, "speedup"),
+    ({"azure_scale_n_invocations": 10}, "invocations"),
+    ({"azure_scale_xl_wall_clock_s": 300.0}, "vectorized engine"),
+])
+def test_check_bench_fails_out_of_band(tmp_path, overrides, fragment):
+    path = write(tmp_path, bench_artifact(**overrides))
+    with pytest.raises(AssertionError, match=fragment):
+        check_bench.main(path)
+
+
+def test_check_bench_fails_on_failed_cell(tmp_path):
+    data = bench_artifact()
+    data = {"bench_schema_version": 1,
+            "cells": {"coldstart": {"ok": False}},
+            "headline": data["headline"]}
+    with pytest.raises(AssertionError, match="cells failed"):
+        check_bench.main(write(tmp_path, data))
+
+
+def test_check_bench_rejects_unknown_schema(tmp_path):
+    data = bench_artifact()
+    data["bench_schema_version"] = 99
+    with pytest.raises(AssertionError, match="schema"):
+        check_bench.main(write(tmp_path, data))
+
+
+# ---------------------------------------------------------- check_latency
+
+def test_check_latency_passes_on_finite(tmp_path):
+    data = {"fleet": {"warmswap": {"latency": {"p50": 0.1, "p99": 1.2},
+                                   "queue_delay_mean": 0.0}}}
+    assert check_latency.main(write(tmp_path, data)) == 0
+
+
+def test_check_latency_fails_on_nan(tmp_path):
+    data = {"fleet": {"warmswap": {"latency": {"p99": math.nan}}}}
+    assert check_latency.main(write(tmp_path, data)) == 1
+
+
+def test_check_latency_fails_on_negative(tmp_path):
+    data = {"fleet": {"p95": -0.5}}
+    assert check_latency.main(write(tmp_path, data)) == 1
+
+
+def test_check_latency_ignores_non_latency_numbers(tmp_path):
+    data = {"fleet": {"n_cold_starts": -1, "notes": {"seed": -7}}}
+    assert check_latency.main(write(tmp_path, data)) == 0
+
+
+# -------------------------------------------------------- check_page_model
+
+def page_artifact():
+    return {"page_model": {
+        "latency_vs_image_size": {
+            "230MB": {"warm_s": 0.05, "hotswap_s": 0.9, "cold_s": 2.4,
+                      "dependency_loading_speedup": 2.6}},
+        "dependency_loading_speedup_paper_scale": 2.7,
+        "cache_footprint": {"saving_fraction": 0.88,
+                            "hotswap_shared_peak_mb": 230.0,
+                            "prebaking_shared_peak_mb": 1900.0}}}
+
+
+def test_check_page_model_passes(tmp_path):
+    assert check_page_model.main(write(tmp_path, page_artifact())) == 0
+
+
+def test_check_page_model_fails_when_hotswap_not_between(tmp_path):
+    data = page_artifact()
+    data["page_model"]["latency_vs_image_size"]["230MB"]["hotswap_s"] = 3.0
+    with pytest.raises(AssertionError, match="between warm and cold"):
+        check_page_model.main(write(tmp_path, data))
+
+
+def test_check_page_model_fails_on_speedup_band(tmp_path):
+    data = page_artifact()
+    data["page_model"]["dependency_loading_speedup_paper_scale"] = 9.0
+    with pytest.raises(AssertionError, match="2.2-3.2"):
+        check_page_model.main(write(tmp_path, data))
+
+
+def test_check_page_model_fails_on_footprint_inversion(tmp_path):
+    data = page_artifact()
+    data["page_model"]["cache_footprint"]["hotswap_shared_peak_mb"] = 2000.0
+    with pytest.raises(AssertionError):
+        check_page_model.main(write(tmp_path, data))
+
+
+# -------------------------------------------------------- check_doc_links
+
+def test_check_doc_links_passes_on_resolvable(tmp_path):
+    (tmp_path / "TARGET.md").write_text("# target\n")
+    doc = tmp_path / "doc.md"
+    doc.write_text("[ok](TARGET.md) [anchor](#sec) "
+                   "[web](https://example.com/x)\n")
+    assert check_doc_links.main(str(doc)) == 0
+
+
+def test_check_doc_links_fails_on_dangling(tmp_path, capsys):
+    doc = tmp_path / "doc.md"
+    doc.write_text("[missing](NOPE.md)\n")
+    assert check_doc_links.main(str(doc)) == 1
+    assert "NOPE.md" in capsys.readouterr().out

@@ -1,0 +1,40 @@
+"""repro-lint: project-specific static analysis for the determinism,
+lock-discipline, shared-state, and spec/registry contracts.
+
+    python -m tools.analysis [--baseline FILE] [--fix-suggestions] paths...
+
+Checkers (each a module exposing ``check(SourceFile) -> List[Finding]``; the
+spec checker works on JSON files instead):
+
+  =================  ======================================================
+  checker            contract it enforces
+  =================  ======================================================
+  determinism        results are a pure function of (spec, seed): no
+                     unseeded RNG, wall clocks, hash()-order, set-order
+                     leaks, or undeclared env reads in simulation code
+  lock-discipline    ``# guarded-by:`` attributes only touched inside
+                     ``with self.<lock>`` (the PR-2 race shape)
+  shared-state       no mutable default args, module-level mutable state,
+                     or stale/loop-variable closure captures (PR-1/PR-4)
+  spec-registry      every scenario component {name, kwargs} matches the
+                     registered factory's signature
+  =================  ======================================================
+
+Findings diff against ``tools/analysis/baseline.json`` — pre-existing
+grandfathered violations pass, new ones fail. Catalog, annotation grammar,
+and baseline workflow: docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+from tools.analysis.findings import (Finding, diff_baseline, findings_json,
+                                     load_baseline, write_baseline)
+
+__all__ = ["Finding", "diff_baseline", "findings_json", "load_baseline",
+           "write_baseline", "run_analysis", "PY_CHECKERS"]
+
+
+def run_analysis(paths, checkers=None):
+    """Run the named ``checkers`` (default: all) over ``paths``; returns the
+    flat finding list in (path, line) order. Programmatic twin of the CLI."""
+    from tools.analysis.__main__ import run_analysis as _impl
+    return _impl(paths, checkers)

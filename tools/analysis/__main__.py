@@ -1,0 +1,126 @@
+"""repro-lint CLI.
+
+    python -m tools.analysis [options] paths...
+
+    --baseline FILE      diff findings against FILE (default:
+                         tools/analysis/baseline.json); grandfathered
+                         findings pass, new ones exit 1
+    --no-baseline        ignore the baseline (every finding is new)
+    --write-baseline     rewrite the baseline from the current findings
+                         (use after an audited grandfathering decision)
+    --json FILE          write the machine-readable findings artifact
+    --fix-suggestions    print a suggested fix under each finding
+    --checkers a,b       run a subset (determinism, lock-discipline,
+                         shared-state, spec-registry)
+
+Exit status: 0 = no new findings, 1 = new findings, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterable, List, Optional, Sequence
+
+from tools.analysis import determinism, locks, shared_state, specs
+from tools.analysis.base import REPO_ROOT, SourceFile, collect_files
+from tools.analysis.findings import (Finding, diff_baseline, findings_json,
+                                     load_baseline, write_baseline)
+
+#: name -> module for the AST (``.py``) checkers.
+PY_CHECKERS = {
+    determinism.CHECKER: determinism,
+    locks.CHECKER: locks,
+    shared_state.CHECKER: shared_state,
+}
+ALL_CHECKERS = tuple(PY_CHECKERS) + (specs.CHECKER,)
+
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "tools", "analysis",
+                                "baseline.json")
+
+
+def run_analysis(paths: Iterable[str],
+                 checkers: Optional[Sequence[str]] = None) -> List[Finding]:
+    """All findings from ``checkers`` (default: all) over ``paths``, sorted
+    by (path, line, col, rule)."""
+    selected = list(checkers) if checkers else list(ALL_CHECKERS)
+    unknown = [c for c in selected if c not in ALL_CHECKERS]
+    if unknown:
+        raise ValueError(f"unknown checker(s) {unknown} "
+                         f"(choose from {list(ALL_CHECKERS)})")
+    py_files, json_files = collect_files(paths)
+    findings: List[Finding] = []
+    for path in py_files:
+        try:
+            src = SourceFile.parse(path)
+        except SyntaxError as e:
+            findings.append(Finding("parse", "syntax-error",
+                                    os.path.relpath(path, REPO_ROOT),
+                                    e.lineno or 1, e.offset or 0, str(e)))
+            continue
+        for name in selected:
+            mod = PY_CHECKERS.get(name)
+            if mod is not None:
+                findings.extend(mod.check(src))
+    if specs.CHECKER in selected:
+        for path in json_files:
+            findings.extend(specs.check_file(path))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.checker, f.rule))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro-lint: project-specific static analysis "
+                    "(docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories to check")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file to diff against (default: "
+                         "tools/analysis/baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline entirely")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the findings artifact to this path")
+    ap.add_argument("--fix-suggestions", action="store_true",
+                    help="print a suggested fix under each finding")
+    ap.add_argument("--checkers", default=None,
+                    help=f"comma-separated subset of {list(ALL_CHECKERS)}")
+    args = ap.parse_args(argv)
+
+    checkers = ([c.strip() for c in args.checkers.split(",") if c.strip()]
+                if args.checkers else None)
+    try:
+        findings = run_analysis(args.paths, checkers)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"baseline: {len(findings)} finding(s) grandfathered into "
+              f"{os.path.relpath(args.baseline, REPO_ROOT)}")
+        return 0
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    new, old = diff_baseline(findings, baseline)
+
+    for f in new:
+        print(f.render(args.fix_suggestions))
+    if args.json_out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json_out)),
+                    exist_ok=True)
+        with open(args.json_out, "w") as fh:
+            json.dump(findings_json(findings, new, old), fh, indent=1)
+            fh.write("\n")
+
+    print(f"repro-lint: {len(findings)} finding(s), {len(old)} baselined, "
+          f"{len(new)} new")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

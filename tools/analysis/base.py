@@ -1,0 +1,156 @@
+"""Shared infrastructure for repro-lint checkers: parsed source files,
+suppression pragmas, scope (qualname) resolution, and file collection.
+
+Pragma grammar (full catalog in docs/ANALYSIS.md):
+
+* ``# repro-lint: allow[rule-a,rule-b]`` — suppress those rules on this
+  physical line and the next (so a standalone comment line sanctions the
+  statement below it);
+* ``# repro-lint: allow-file[rule-a]`` — suppress a rule file-wide;
+* ``# guarded-by: <lockattr>`` / ``# requires-lock: <lockattr>`` — the
+  lock-discipline annotations, parsed by ``tools/analysis/locks.py``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.analysis.findings import Finding
+
+#: Repo root = the directory holding ``tools/`` (fingerprints are relative
+#: to it, so runs from any cwd produce identical baselines).
+REPO_ROOT = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+
+_PRAGMA = re.compile(r"#\s*repro-lint:\s*(allow|allow-file)\[([^\]]+)\]")
+
+
+def rel_path(path: str) -> str:
+    """``path`` relative to the repo root, posix separators."""
+    return os.path.relpath(os.path.abspath(path),
+                           REPO_ROOT).replace(os.sep, "/")
+
+
+@dataclass
+class SourceFile:
+    """One parsed Python source file plus its suppression pragmas."""
+    path: str                      # absolute
+    rel: str                       # repo-relative (fingerprint key)
+    text: str
+    lines: List[str]               # 1-indexed via line(n)
+    tree: ast.Module
+    allow: Dict[int, Set[str]] = field(default_factory=dict)
+    allow_file: Set[str] = field(default_factory=set)
+
+    @classmethod
+    def parse(cls, path: str) -> "SourceFile":
+        with open(path) as f:
+            text = f.read()
+        lines = text.splitlines()
+        tree = ast.parse(text, filename=path)
+        allow: Dict[int, Set[str]] = {}
+        allow_file: Set[str] = set()
+        for i, raw in enumerate(lines, start=1):
+            for kind, rules in _PRAGMA.findall(raw):
+                names = {r.strip() for r in rules.split(",") if r.strip()}
+                if kind == "allow-file":
+                    allow_file |= names
+                else:
+                    # a pragma covers its own line and the one below, so a
+                    # standalone comment can sanction the next statement
+                    allow.setdefault(i, set()).update(names)
+                    allow.setdefault(i + 1, set()).update(names)
+        return cls(path=path, rel=rel_path(path), text=text, lines=lines,
+                   tree=tree, allow=allow, allow_file=allow_file)
+
+    def line(self, n: int) -> str:
+        """The 1-indexed physical source line (empty when out of range)."""
+        return self.lines[n - 1] if 1 <= n <= len(self.lines) else ""
+
+    def allowed(self, lineno: int, rule: str) -> bool:
+        if rule in self.allow_file:
+            return True
+        return rule in self.allow.get(lineno, ())
+
+    def finding(self, checker: str, rule: str, node: ast.AST, message: str,
+                scope: str = "", suggestion: str = "") -> Optional[Finding]:
+        """A :class:`Finding` at ``node`` — or ``None`` when a pragma on the
+        node's line (or the line above) suppresses the rule."""
+        lineno = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        if self.allowed(lineno, rule):
+            return None
+        return Finding(checker=checker, rule=rule, path=self.rel,
+                       line=lineno, col=col, message=message, scope=scope,
+                       snippet=self.line(lineno).strip(),
+                       suggestion=suggestion)
+
+
+# -------------------------------------------------------------- scope walking
+
+def qualname_index(tree: ast.Module) -> Dict[ast.AST, str]:
+    """node -> dotted qualname of the innermost enclosing class/function
+    (``""`` at module level), for every node in ``tree``."""
+    index: Dict[ast.AST, str] = {}
+
+    def walk(node: ast.AST, scope: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_scope = scope
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                child_scope = f"{scope}.{child.name}" if scope else child.name
+            index[child] = child_scope
+            walk(child, child_scope)
+
+    index[tree] = ""
+    walk(tree, "")
+    return index
+
+
+def enclosing_function_name(index: Dict[ast.AST, str], node: ast.AST) -> str:
+    """Last component of the node's scope qualname (``""`` at module level).
+    Used to match config-sanctioned entry points by function name."""
+    scope = index.get(node, "")
+    return scope.rsplit(".", 1)[-1] if scope else ""
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else ``None``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ------------------------------------------------------------ file collection
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules",
+              ".hypothesis", "results"}
+
+
+def collect_files(paths: Iterable[str]) -> Tuple[List[str], List[str]]:
+    """Expand CLI ``paths`` (files or directories) into sorted
+    ``(python_files, json_files)`` absolute-path lists."""
+    py: Set[str] = set()
+    js: Set[str] = set()
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isfile(p):
+            (py if p.endswith(".py") else
+             js if p.endswith(".json") else set()).add(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            for name in files:
+                if name.endswith(".py"):
+                    py.add(os.path.join(root, name))
+                elif name.endswith(".json"):
+                    js.add(os.path.join(root, name))
+    return sorted(py), sorted(js)

@@ -1,0 +1,67 @@
+"""Project-specific scoping for repro-lint: which trees each checker walks
+and which call sites are *declared* configuration entry points.
+
+The determinism contract (docs/SIMULATION.md) binds the simulation path —
+engines, experiment plumbing, traces, benches, examples — not the live
+serving/model stack, which legitimately reads wall clocks and env vars. The
+scopes below encode that boundary once, so checkers don't grow per-file
+carve-outs; point sanctions inside scoped code use inline
+``# repro-lint: allow[rule]`` pragmas instead (docs/ANALYSIS.md).
+"""
+from __future__ import annotations
+
+from typing import Set, Tuple
+
+#: Trees the determinism checker walks: every module whose behavior must be
+#: a pure function of (spec, seed). ``src/repro/core/`` includes
+#: ``traces.py`` and both fleet engines.
+DETERMINISM_SCOPE: Tuple[str, ...] = (
+    "src/repro/core/",
+    "src/repro/experiments/",
+    "benchmarks/",
+    "examples/",
+)
+
+#: Trees the shared-state checker walks — the determinism scope plus the
+#: concurrent serving/runtime layers (where a shared mutable default is a
+#: cross-thread bug, the PR-1 class) and the analyzer itself.
+SHARED_STATE_SCOPE: Tuple[str, ...] = DETERMINISM_SCOPE + (
+    "src/repro/serving/",
+    "src/repro/runtime/",
+    "tools/",
+)
+
+#: The *declared* environment entry points: ``(repo-relative path, function
+#: name)`` pairs that are allowed to read/write ``os.environ``. Everything
+#: else in the determinism scope must take configuration through a spec or
+#: an argument. Keep this list short — each entry is a documented knob:
+#:   * ``set_smoke``/``smoke_mode`` — the ONE smoke-scale switch
+#:     (benchmarks/common.py; docs/API.md);
+#:   * ``_scan_enabled`` — the REPRO_FLEET_VEC_SCAN opt-in for the jitted
+#:     scan path (docs/SIMULATION.md, "Vectorized engine").
+SANCTIONED_ENVIRON: Set[Tuple[str, str]] = {
+    ("benchmarks/common.py", "set_smoke"),
+    ("benchmarks/common.py", "smoke_mode"),
+    ("src/repro/core/fleet_vec.py", "_scan_enabled"),
+}
+
+#: Wall-clock readers that are fine anywhere: monotonic *interval* timers
+#: used by benches and the live manager's stats. ``time.time`` /
+#: ``datetime.now`` / ``time.monotonic`` are NOT here — absolute clocks
+#: leak into simulated state; sanction individual live-side sites with
+#: ``# repro-lint: allow[wall-clock]``.
+SANCTIONED_TIMERS: Set[str] = {
+    "perf_counter", "perf_counter_ns", "process_time", "process_time_ns",
+}
+
+#: Scenario component field -> kwargs the runtime injects when building it
+#: (``run()`` passes the resolved cost model into page-cost factories), so
+#: the spec checker doesn't demand them from the JSON.
+SPEC_INJECTED_KWARGS = {
+    "page_cost": {"cost"},
+}
+
+
+def in_scope(rel: str, scope: Tuple[str, ...]) -> bool:
+    """True when repo-relative ``rel`` lives under one of ``scope``'s trees."""
+    return any(rel == s or rel.startswith(s) for s in scope)

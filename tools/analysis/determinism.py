@@ -1,0 +1,218 @@
+"""Determinism checker: the repo's bit-identity guarantee, enforced at the AST.
+
+Every simulation result must be a pure function of (spec, seed) — that is
+what lets serial vs parallel sweeps assert byte-identity and the vectorized
+engine assert sha256-identity against the event engine. This checker flags
+the ways nondeterminism historically sneaks in:
+
+* ``unseeded-rng`` — module-level ``np.random.*`` / bare ``random.*`` calls
+  (global RNG state), and ``default_rng()`` / ``Random()`` with no seed;
+* ``wall-clock`` — ``time.time`` / ``datetime.now`` / ``time.monotonic``
+  references in simulation code (monotonic *interval* timers such as
+  ``perf_counter`` are sanctioned bench timers, config.SANCTIONED_TIMERS);
+* ``hash-randomization`` — builtin ``hash()`` on simulation inputs: salted
+  per process by PYTHONHASHSEED, so it is not stable across runs;
+* ``set-iteration`` — iterating a set (or joining/listing one) where order
+  flows into outputs; set order is hash-order, wrap in ``sorted(...)``;
+* ``environ-read`` — ``os.environ`` / ``os.getenv`` outside the declared
+  config entry points (config.SANCTIONED_ENVIRON).
+
+Scope: ``config.DETERMINISM_SCOPE``. Sanction individual live-side sites
+(the Dependency Manager's LRU clock, registration timestamps) with
+``# repro-lint: allow[wall-clock]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.analysis import config
+from tools.analysis.base import (SourceFile, dotted_name,
+                                 enclosing_function_name, qualname_index)
+from tools.analysis.findings import Finding
+
+CHECKER = "determinism"
+
+#: Constructors that are *seeded RNG factories* when called with arguments.
+_SEEDED_FACTORIES = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                     "Philox", "MT19937", "SFC64", "RandomState", "Random"}
+_WALL_CLOCK_ATTRS = {"time", "monotonic", "monotonic_ns"}
+_DATETIME_NOW = {"now", "utcnow", "today"}
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, Set[str]]:
+    """Local alias sets for the modules the rules care about, plus names
+    imported *from* them (``from time import time`` -> bare-name hits)."""
+    mods: Dict[str, Set[str]] = {"numpy": set(), "random": set(), "time": set(),
+                                 "datetime": set(), "os": set()}
+    from_names: Dict[str, Set[str]] = {"random": set(), "time": set(),
+                                       "datetime": set(), "os": set()}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                root = a.name.split(".")[0]
+                if root in mods:
+                    mods[root].add(a.asname or root)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            root = node.module.split(".")[0]
+            if root in from_names:
+                for a in node.names:
+                    from_names[root].add(a.asname or a.name)
+    return {"mods": mods, "from": from_names}  # type: ignore[return-value]
+
+
+def check(src: SourceFile) -> List[Finding]:
+    if not config.in_scope(src.rel, config.DETERMINISM_SCOPE):
+        return []
+    aliases = _import_aliases(src.tree)
+    mods, from_names = aliases["mods"], aliases["from"]
+    scopes = qualname_index(src.tree)
+    findings: List[Finding] = []
+
+    def emit(rule: str, node: ast.AST, message: str, suggestion: str) -> None:
+        f = src.finding(CHECKER, rule, node, message,
+                        scope=scopes.get(node, ""), suggestion=suggestion)
+        if f is not None:
+            findings.append(f)
+
+    # -- statically-known sets in each function scope (for set-iteration) --
+    set_vars: Dict[str, Set[str]] = {}
+
+    def _is_set_expr(node: ast.AST, scope: str) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            # set algebra: s - {...}, s | t — a set if either side is
+            return (_is_set_expr(node.left, scope)
+                    or _is_set_expr(node.right, scope))
+        if isinstance(node, ast.Name):
+            return node.id in set_vars.get(scope, set())
+        return False
+
+    for node in ast.walk(src.tree):
+        scope = scopes.get(node, "")
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                _is_set_expr(node.value, scope):
+            set_vars.setdefault(scope, set()).add(node.targets[0].id)
+
+    for node in ast.walk(src.tree):
+        scope = scopes.get(node, "")
+
+        # ---------------------------------------------------- unseeded-rng
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname:
+                parts = fname.split(".")
+                head, tail = parts[0], parts[-1]
+                np_random = (len(parts) >= 3 and head in mods["numpy"]
+                             and parts[1] == "random")
+                std_random = (len(parts) == 2 and head in mods["random"])
+                bare_random = (len(parts) == 1
+                               and tail in from_names["random"])
+                if np_random or std_random or bare_random:
+                    seeded_factory = (tail in _SEEDED_FACTORIES
+                                      and (node.args or node.keywords))
+                    if not seeded_factory:
+                        if tail in _SEEDED_FACTORIES:
+                            msg = (f"'{fname}()' without a seed draws entropy "
+                                   f"from the OS — results are not a function "
+                                   f"of the spec")
+                            fix = f"pass an explicit seed: {fname}(seed)"
+                        else:
+                            msg = (f"'{fname}' uses global RNG state — "
+                                   f"unseeded and shared across callers")
+                            fix = ("thread a seeded np.random.default_rng"
+                                   "(seed) / random.Random(seed) through "
+                                   "instead")
+                        emit("unseeded-rng", node, msg, fix)
+
+            # ------------------------------------------- hash-randomization
+            if isinstance(node.func, ast.Name) and node.func.id == "hash":
+                emit("hash-randomization", node,
+                     "builtin hash() is salted per process "
+                     "(PYTHONHASHSEED) — not stable across runs",
+                     "use zlib.crc32 / hashlib over an encoded key, or an "
+                     "explicit index")
+
+            # ------------------------------------------------ environ-read
+            if fname and ((len(fname.split(".")) == 2
+                           and fname.split(".")[0] in mods["os"]
+                           and fname.split(".")[1] == "getenv")
+                          or (fname.endswith(".environ.get")
+                              and fname.split(".")[0] in mods["os"])):
+                _check_environ(src, node, scopes, emit)
+
+        # ------------------------------------------- environ subscript use
+        if isinstance(node, ast.Subscript):
+            base = dotted_name(node.value)
+            if base and base.split(".")[0] in mods["os"] and \
+                    base.endswith(".environ"):
+                _check_environ(src, node, scopes, emit)
+
+        # -------------------------------------------------------- wall-clock
+        if isinstance(node, ast.Attribute):
+            name = dotted_name(node)
+            if name:
+                parts = name.split(".")
+                head, tail = parts[0], parts[-1]
+                if len(parts) == 2 and head in mods["time"] and \
+                        tail in _WALL_CLOCK_ATTRS and \
+                        tail not in config.SANCTIONED_TIMERS:
+                    emit("wall-clock", node,
+                         f"'{name}' read in simulation scope — simulated "
+                         f"time must come from the trace/event clock",
+                         "pass 'now' in from the simulation clock, or mark "
+                         "a live-side site with "
+                         "'# repro-lint: allow[wall-clock]'")
+                elif tail in _DATETIME_NOW and head in mods["datetime"]:
+                    emit("wall-clock", node,
+                         f"'{name}' reads the wall clock",
+                         "inject timestamps via arguments/spec")
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            # from-imports: `from time import time` then bare `time()`
+            if node.id in from_names["time"] and \
+                    node.id in _WALL_CLOCK_ATTRS:
+                emit("wall-clock", node,
+                     f"'{node.id}' (imported from time) reads the wall clock",
+                     "pass 'now' in from the simulation clock")
+
+        # ----------------------------------------------------- set-iteration
+        iters: List[ast.AST] = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters.extend(g.iter for g in node.generators)
+        elif isinstance(node, ast.Call):
+            fname = dotted_name(node.func) or ""
+            if (fname.endswith(".join") or fname.split(".")[-1] in
+                    ("list", "tuple", "enumerate")) and node.args:
+                iters.append(node.args[0])
+        for it in iters:
+            if _is_set_expr(it, scope):
+                emit("set-iteration", it,
+                     "iteration order over a set is hash-order — "
+                     "nondeterministic across processes once it flows into "
+                     "an ordered output",
+                     "wrap in sorted(...) (or keep a list/dict, which "
+                     "preserve insertion order)")
+
+    return findings
+
+
+def _check_environ(src: SourceFile, node: ast.AST, scopes, emit) -> None:
+    fn = enclosing_function_name(scopes, node)
+    if (src.rel, fn) in config.SANCTIONED_ENVIRON:
+        return
+    emit("environ-read", node,
+         "os.environ access outside the declared config entry points "
+         "(tools/analysis/config.py SANCTIONED_ENVIRON) — hidden "
+         "configuration channels break spec-purity",
+         "route the knob through the scenario spec / function arguments, "
+         "or declare this function as an entry point in "
+         "tools/analysis/config.py")

@@ -1,0 +1,138 @@
+"""Finding model, fingerprints, and the baseline-diff workflow of repro-lint.
+
+A finding is one rule violation at one source location. Its *fingerprint* is
+deliberately line-number-free — ``checker | rule | path | scope | normalized
+source line`` — so unrelated edits above a grandfathered violation don't churn
+the baseline, while any change to the offending line itself (or moving it to
+another function) makes it a *new* finding again.
+
+The baseline file (``tools/analysis/baseline.json``) maps fingerprints to
+counts: pre-existing violations are grandfathered, new ones fail the run.
+Workflow and grammar: docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+#: Version of the findings-JSON artifact layout (``--json`` output).
+FINDINGS_SCHEMA_VERSION = 1
+#: Version of the baseline file layout.
+BASELINE_SCHEMA_VERSION = 1
+
+_WS = re.compile(r"\s+")
+
+
+@dataclass
+class Finding:
+    """One rule violation at one source location.
+
+    ``scope`` is the dotted qualname of the enclosing class/function
+    (``""`` at module level); ``snippet`` the stripped offending source
+    line. Both feed the line-number-free fingerprint.
+    """
+    checker: str
+    rule: str
+    path: str                 # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+    scope: str = ""
+    snippet: str = ""
+    suggestion: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        key = "|".join((self.checker, self.rule, self.path, self.scope,
+                        _WS.sub(" ", self.snippet.strip())))
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def render(self, fix_suggestions: bool = False) -> str:
+        out = (f"{self.path}:{self.line}:{self.col}: "
+               f"[{self.checker}/{self.rule}] {self.message}")
+        if fix_suggestions and self.suggestion:
+            out += f"\n    fix: {self.suggestion}"
+        return out
+
+
+# ------------------------------------------------------------------- baseline
+
+def load_baseline(path: Optional[str]) -> Dict[str, int]:
+    """Fingerprint -> grandfathered count from a baseline file; an absent
+    path or missing file is an empty baseline (nothing grandfathered)."""
+    if not path:
+        return {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    version = data.get("baseline_schema_version")
+    if version != BASELINE_SCHEMA_VERSION:
+        raise ValueError(f"unsupported baseline_schema_version {version!r} "
+                         f"in {path} (expected {BASELINE_SCHEMA_VERSION})")
+    return {fp: int(entry["count"])
+            for fp, entry in data.get("findings", {}).items()}
+
+
+def write_baseline(path: str, findings: List[Finding]) -> None:
+    """Write ``findings`` as the new grandfathered baseline (sorted, with
+    a human-readable locator per fingerprint so reviews can audit it)."""
+    entries: Dict[str, Dict[str, Any]] = {}
+    for f in findings:
+        fp = f.fingerprint
+        if fp in entries:
+            entries[fp]["count"] += 1
+        else:
+            entries[fp] = {"count": 1, "rule": f"{f.checker}/{f.rule}",
+                           "path": f.path, "scope": f.scope,
+                           "snippet": _WS.sub(" ", f.snippet.strip())}
+    payload = {
+        "baseline_schema_version": BASELINE_SCHEMA_VERSION,
+        "findings": {fp: entries[fp] for fp in sorted(entries)},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def diff_baseline(findings: List[Finding],
+                  baseline: Mapping[str, int]) -> Tuple[List[Finding],
+                                                        List[Finding]]:
+    """Split ``findings`` into (new, grandfathered) against ``baseline``.
+
+    A fingerprint grandfathers at most ``baseline[fp]`` occurrences — if a
+    grandfathered violation is duplicated, the extra copies are new."""
+    remaining = dict(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old
+
+
+def findings_json(findings: List[Finding], new: List[Finding],
+                  baselined: List[Finding]) -> Dict[str, Any]:
+    """The machine-readable artifact CI uploads (``--json``)."""
+    return {
+        "analysis_schema_version": FINDINGS_SCHEMA_VERSION,
+        "n_findings": len(findings),
+        "n_new": len(new),
+        "n_baselined": len(baselined),
+        "findings": [f.to_dict() for f in findings],
+        "new": [f.fingerprint for f in new],
+    }

@@ -1,0 +1,166 @@
+"""Lock-discipline checker: ``# guarded-by`` annotations, verified at the AST.
+
+The PR-2 BULK-restore race was a classic guarded-state bug: two code paths
+touched shared restore state, only one of them under the lock. This checker
+makes that contract machine-checked:
+
+* annotate an attribute at its initialization site::
+
+      self._images: Dict[str, Image] = {}   # guarded-by: _lock
+
+* every other read or write of ``self._images`` in that class must then be
+  *lexically* inside a ``with self._lock:`` block;
+* a helper that is only ever called with the lock already held declares it::
+
+      def _admit(self, img):   # requires-lock: _lock
+
+  its body may touch guarded attributes freely, and in exchange every call
+  site of ``self._admit(...)`` must itself hold the lock;
+* ``__init__`` is exempt (single-threaded construction happens-before
+  publication of the object).
+
+Rules: ``unguarded-access`` (attribute touched without the lock),
+``unlocked-call`` (a requires-lock helper invoked without the lock).
+Grammar and workflow: docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.base import SourceFile
+from tools.analysis.findings import Finding
+
+CHECKER = "lock-discipline"
+
+_GUARDED_BY = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+_REQUIRES = re.compile(r"#\s*requires-lock:\s*([A-Za-z_]\w*)")
+
+
+@dataclass
+class _ClassContract:
+    guarded: Dict[str, str] = field(default_factory=dict)   # attr -> lock
+    requires: Dict[str, str] = field(default_factory=dict)  # method -> lock
+
+
+def _comment_match(src: SourceFile, regex: re.Pattern,
+                   lo: int, hi: int) -> Optional[str]:
+    """First ``regex`` group found in the comments of lines [lo, hi]."""
+    for n in range(lo, hi + 1):
+        m = regex.search(src.line(n))
+        if m:
+            return m.group(1)
+    return None
+
+
+def _collect_contract(src: SourceFile, cls: ast.ClassDef) -> _ClassContract:
+    contract = _ClassContract()
+    for method in cls.body:
+        if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # requires-lock: on the def line(s) or the first body line
+        first_body = method.body[0].lineno if method.body else method.lineno
+        lock = _comment_match(src, _REQUIRES, method.lineno, first_body)
+        if lock:
+            contract.requires[method.name] = lock
+        for node in ast.walk(method):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        hi = getattr(node, "end_lineno", node.lineno)
+                        g = _comment_match(src, _GUARDED_BY, node.lineno, hi)
+                        if g:
+                            contract.guarded[t.attr] = g
+    return contract
+
+
+def _with_locks(item: ast.withitem) -> Optional[str]:
+    """The lock attr name when ``item`` is ``self.<lock>`` (with or without
+    ``as``), else ``None``."""
+    e = item.context_expr
+    if isinstance(e, ast.Attribute) and isinstance(e.value, ast.Name) and \
+            e.value.id == "self":
+        return e.attr
+    return None
+
+
+def check(src: SourceFile) -> List[Finding]:
+    # fast path: nothing to do in files without annotations
+    if "guarded-by:" not in src.text and "requires-lock:" not in src.text:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef):
+            contract = _collect_contract(src, node)
+            if contract.guarded or contract.requires:
+                findings.extend(_check_class(src, node, contract))
+    return findings
+
+
+def _check_class(src: SourceFile, cls: ast.ClassDef,
+                 contract: _ClassContract) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def visit(node: ast.AST, held: Set[str], method: ast.FunctionDef) -> None:
+        """Walk ``method``'s body tracking the lexically-held lock set."""
+        for child in ast.iter_child_nodes(node):
+            child_held = held
+            if isinstance(child, (ast.With, ast.AsyncWith)):
+                acquired = {lk for item in child.items
+                            for lk in [_with_locks(item)] if lk}
+                child_held = held | acquired
+
+            exempt = method.name == "__init__"
+            holds_for = contract.requires.get(method.name)
+
+            if isinstance(child, ast.Attribute) and \
+                    isinstance(child.value, ast.Name) and \
+                    child.value.id == "self":
+                lock = contract.guarded.get(child.attr)
+                if lock and not exempt and lock not in child_held and \
+                        holds_for != lock:
+                    kind = ("write" if isinstance(child.ctx,
+                                                  (ast.Store, ast.Del))
+                            else "read")
+                    f = src.finding(
+                        CHECKER, "unguarded-access", child,
+                        f"{kind} of 'self.{child.attr}' (guarded-by: {lock}) "
+                        f"outside 'with self.{lock}' in "
+                        f"{cls.name}.{method.name}",
+                        scope=f"{cls.name}.{method.name}",
+                        suggestion=f"wrap the access in 'with self.{lock}:' "
+                                   f"or declare the method "
+                                   f"'# requires-lock: {lock}'")
+                    if f is not None:
+                        findings.append(f)
+
+            if isinstance(child, ast.Call) and \
+                    isinstance(child.func, ast.Attribute) and \
+                    isinstance(child.func.value, ast.Name) and \
+                    child.func.value.id == "self":
+                lock = contract.requires.get(child.func.attr)
+                if lock and not exempt and lock not in child_held and \
+                        holds_for != lock:
+                    f = src.finding(
+                        CHECKER, "unlocked-call", child,
+                        f"call to 'self.{child.func.attr}()' "
+                        f"(requires-lock: {lock}) without holding "
+                        f"'self.{lock}' in {cls.name}.{method.name}",
+                        scope=f"{cls.name}.{method.name}",
+                        suggestion=f"acquire 'with self.{lock}:' around the "
+                                   f"call")
+                    if f is not None:
+                        findings.append(f)
+
+            visit(child, child_held, method)
+
+    for member in cls.body:
+        if isinstance(member, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            visit(member, set(), member)
+    return findings

@@ -1,0 +1,281 @@
+"""Shared-state hygiene checker: the PR-1 and PR-4 bug classes, at the AST.
+
+* ``mutable-default`` — ``def f(x=[])`` / ``={}`` / ``=set()``: the default
+  is created once and shared by every call (and, in this repo, by every
+  simulation in a sweep — the PR-1 shared-mutable-default class);
+* ``module-mutable`` — a module-level list/dict/set literal mutated from
+  inside a function (or rebound via ``global``): cross-run state that
+  survives between scenarios in one process;
+* ``loop-closure`` — a closure defined inside a loop that reads the loop
+  variable freely: Python binds late, so every closure sees the *last*
+  iteration's value once the loop has advanced (the PR-4 shape — the
+  ``pick_worker``/``spawn_prewarm`` closures silently reading a stale heap
+  key). Closures consumed immediately by ``sorted``/``min``/``max``/
+  ``map``/``filter`` (or called on the spot) are exempt;
+* ``stale-capture`` — a closure reading a free variable that the enclosing
+  function *rebinds after* the closure is defined: the closure sees the
+  rebound value when it finally runs, which is exactly how the PR-4
+  counters got silently zeroed.
+
+Scope: ``config.SHARED_STATE_SCOPE``. Intentional module-level state (the
+bench stack cache, the scan-path diagnostics dict) is sanctioned inline
+with ``# repro-lint: allow[module-mutable]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis import config
+from tools.analysis.base import SourceFile, qualname_index
+from tools.analysis.findings import Finding
+
+CHECKER = "shared-state"
+
+_MUTATORS = {"append", "add", "update", "extend", "insert", "remove",
+             "discard", "setdefault", "clear", "pop", "popitem"}
+#: Calls that consume a closure argument before the loop advances.
+_IMMEDIATE_CONSUMERS = {"sorted", "min", "max", "map", "filter", "sum",
+                        "any", "all", "key"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "dict", "set"))
+
+
+def check(src: SourceFile) -> List[Finding]:
+    if not config.in_scope(src.rel, config.SHARED_STATE_SCOPE):
+        return []
+    scopes = qualname_index(src.tree)
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(src.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    findings: List[Finding] = []
+
+    def emit(rule: str, node: ast.AST, message: str, suggestion: str) -> None:
+        f = src.finding(CHECKER, rule, node, message,
+                        scope=scopes.get(node, ""), suggestion=suggestion)
+        if f is not None:
+            findings.append(f)
+
+    # ------------------------------------------------------- mutable-default
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            args = node.args
+            for default in list(args.defaults) + \
+                    [d for d in args.kw_defaults if d is not None]:
+                if _is_mutable_literal(default):
+                    name = getattr(node, "name", "<lambda>")
+                    emit("mutable-default", default,
+                         f"mutable default argument in '{name}' — created "
+                         f"once, shared by every call",
+                         "default to None and create the container inside "
+                         "the function")
+
+    # -------------------------------------------------------- module-mutable
+    module_mutables: Set[str] = set()
+    for stmt in src.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name) and \
+                _is_mutable_literal(stmt.value):
+            module_mutables.add(stmt.targets[0].id)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None and \
+                isinstance(stmt.target, ast.Name) and \
+                _is_mutable_literal(stmt.value):
+            module_mutables.add(stmt.target.id)
+    if module_mutables:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            local_shadow = {a.arg for a in (node.args.args
+                                            + node.args.kwonlyargs
+                                            + node.args.posonlyargs)}
+            for inner in ast.walk(node):
+                hit: Optional[Tuple[ast.AST, str]] = None
+                if isinstance(inner, ast.Global):
+                    for name in inner.names:
+                        if name in module_mutables:
+                            hit = (inner, name)
+                elif isinstance(inner, ast.Call) and \
+                        isinstance(inner.func, ast.Attribute) and \
+                        isinstance(inner.func.value, ast.Name) and \
+                        inner.func.value.id in module_mutables and \
+                        inner.func.value.id not in local_shadow and \
+                        inner.func.attr in _MUTATORS:
+                    hit = (inner, inner.func.value.id)
+                elif isinstance(inner, (ast.Subscript,)) and \
+                        isinstance(inner.ctx, (ast.Store, ast.Del)) and \
+                        isinstance(inner.value, ast.Name) and \
+                        inner.value.id in module_mutables and \
+                        inner.value.id not in local_shadow:
+                    hit = (inner, inner.value.id)
+                if hit is not None:
+                    n, name = hit
+                    emit("module-mutable", n,
+                         f"module-level mutable '{name}' mutated from "
+                         f"function scope — state leaks across runs in one "
+                         f"process",
+                         "pass the container in explicitly, or sanction an "
+                         "intentional process-wide cache with "
+                         "'# repro-lint: allow[module-mutable]'")
+
+    # ------------------------------------- loop-closure and stale-capture
+    for func in ast.walk(src.tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        findings.extend(_check_closures(src, func, scopes, parents))
+    return findings
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    """Names an assignment target REBINDS: bare names and tuple/list/star
+    elements — not the base of ``obj.attr = ...`` / ``obj[k] = ...``, which
+    mutate the object without rebinding the name."""
+    if isinstance(target, ast.Name):
+        return {target.id}
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for elt in target.elts:
+            out |= _target_names(elt)
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return set()
+
+
+def _loop_targets(loop: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    if isinstance(loop, (ast.For, ast.AsyncFor)):
+        for n in ast.walk(loop.target):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def _closure_free_loads(closure: ast.AST) -> Set[str]:
+    """Names the closure reads that it neither binds as params nor assigns
+    locally (an approximation of its free variables)."""
+    if isinstance(closure, ast.Lambda):
+        body, args = [closure.body], closure.args
+    else:
+        body, args = closure.body, closure.args
+    bound = {a.arg for a in (args.args + args.kwonlyargs + args.posonlyargs)}
+    if args.vararg:
+        bound.add(args.vararg.arg)
+    if args.kwarg:
+        bound.add(args.kwarg.arg)
+    loads: Set[str] = set()
+    assigned: Set[str] = set()
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Name):
+                if isinstance(n.ctx, ast.Load):
+                    loads.add(n.id)
+                else:
+                    assigned.add(n.id)
+    return loads - bound - assigned
+
+
+def _immediately_consumed(closure: ast.AST,
+                          parents: Dict[ast.AST, ast.AST]) -> bool:
+    """True when the closure is an argument of a consume-now call (sorted/
+    min/max/...), a ``key=`` keyword, or is invoked on the spot."""
+    p = parents.get(closure)
+    if isinstance(p, ast.keyword) and p.arg == "key":
+        return True
+    if isinstance(p, ast.Call):
+        if p.func is closure:            # (lambda: ...)() — IIFE
+            return True
+        fname = p.func.id if isinstance(p.func, ast.Name) else \
+            p.func.attr if isinstance(p.func, ast.Attribute) else ""
+        if fname in _IMMEDIATE_CONSUMERS:
+            return True
+    return False
+
+
+def _check_closures(src: SourceFile, func: ast.AST, scopes, parents
+                    ) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # names rebound (plain Name assignment) in func's own body, with lines —
+    # excludes nested function bodies, which have their own scopes
+    rebinds: Dict[str, List[int]] = {}
+
+    def collect_rebinds(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(child, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (child.targets if isinstance(child, ast.Assign)
+                           else [child.target])
+                for t in targets:
+                    for name in _target_names(t):
+                        rebinds.setdefault(name, []).append(child.lineno)
+            elif isinstance(child, (ast.For, ast.AsyncFor)):
+                for name in _target_names(child.target):
+                    rebinds.setdefault(name, []).append(child.lineno)
+            collect_rebinds(child)
+
+    collect_rebinds(func)
+
+    def visit(node: ast.AST, loops: List[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                free = _closure_free_loads(child)
+                consumed = _immediately_consumed(child, parents)
+                name = getattr(child, "name", "<lambda>")
+                in_loop_targets = {t for lp in loops
+                                   for t in _loop_targets(lp)}
+                if not consumed:
+                    late = sorted(free & in_loop_targets)
+                    if late:
+                        f = src.finding(
+                            CHECKER, "loop-closure", child,
+                            f"closure '{name}' captures loop variable(s) "
+                            f"{late} by reference — every closure sees the "
+                            f"last iteration's value (late binding)",
+                            scope=scopes.get(child, ""),
+                            suggestion=f"bind the current value as a "
+                                       f"default: lambda {late[0]}="
+                                       f"{late[0]}: ...")
+                        if f is not None:
+                            findings.append(f)
+                    else:
+                        end = getattr(child, "end_lineno", child.lineno)
+                        stale = sorted(
+                            v for v in free
+                            if any(ln > end for ln in rebinds.get(v, ())))
+                        if stale:
+                            f = src.finding(
+                                CHECKER, "stale-capture", child,
+                                f"closure '{name}' reads {stale} which the "
+                                f"enclosing function rebinds later — the "
+                                f"closure will see the rebound value, not "
+                                f"the one at definition",
+                                scope=scopes.get(child, ""),
+                                suggestion="bind the value locally before "
+                                           "the def (x = x) or pass it as a "
+                                           "defaulted parameter")
+                            if f is not None:
+                                findings.append(f)
+                # nested defs get their own pass via the outer loop in check()
+                continue
+            child_loops = loops
+            if isinstance(child, (ast.For, ast.AsyncFor, ast.While)):
+                child_loops = loops + [child]
+                # the loop's iter/target are evaluated outside the body
+                visit(child, child_loops)
+                continue
+            visit(child, child_loops)
+
+    visit(func, [])
+    return findings

@@ -1,0 +1,186 @@
+"""Spec/registry cross-validator: scenario JSON vs the live component
+registries, without running a simulation.
+
+A checked-in ``benchmarks/scenarios/*.json`` can silently rot: a component
+gets renamed, a factory kwarg is dropped, a required argument grows. The
+runtime catches that only when the spec is *executed* — this checker catches
+it at lint time by resolving every component ``{name, kwargs}`` against the
+registered factory's ``inspect.signature``:
+
+* ``unknown-component`` — the name is not in the field's registry
+  (did-you-mean suggestions included);
+* ``unknown-kwarg`` — a kwarg the factory does not accept (did-you-mean
+  against the real parameter names);
+* ``missing-required-arg`` — a required factory parameter the spec does not
+  supply (kwargs injected by the runtime — ``cost`` for page-cost models —
+  are accounted for, config.SPEC_INJECTED_KWARGS);
+* ``invalid-spec`` — everything ``Scenario.from_dict`` rejects (unknown
+  fields, bad engine/methods, cross-field constraints), surfaced without
+  running anything.
+
+Importing the registries executes module-level registration only — no
+simulation runs. Only files that *look like* scenario specs (JSON objects
+carrying a scenario marker field) are checked, so arbitrary JSON artifacts
+pass through untouched.
+"""
+from __future__ import annotations
+
+import inspect
+import json
+import os
+import sys
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from tools.analysis import config
+from tools.analysis.base import REPO_ROOT, rel_path
+from tools.analysis.findings import Finding
+
+CHECKER = "spec-registry"
+
+#: A JSON object is treated as a scenario spec iff it has one of these keys.
+_SCENARIO_MARKERS = ("schema_version", "engine", "traces")
+
+#: spec field -> how to find its registry (module, attribute).
+_REGISTRY_SOURCES = {
+    "traces": ("repro.core.traces", "TRACE_GENERATORS"),
+    "cost": ("repro.core.simulator", "COST_MODELS"),
+    "page_cost": ("repro.core.costmodel", "PAGE_COST_MODELS"),
+    "prewarm": ("repro.core.keepalive", "PREWARM_POLICIES"),
+    "placement": ("repro.serving.scheduler", "PLACEMENTS"),
+}
+
+
+def _ensure_importable() -> None:
+    src = os.path.join(REPO_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def _registries() -> Dict[str, Any]:
+    """Field -> live Registry. Imports are module-level registration only."""
+    import importlib
+    _ensure_importable()
+    out = {}
+    for fld, (mod, attr) in _REGISTRY_SOURCES.items():
+        out[fld] = getattr(importlib.import_module(mod), attr)
+    return out
+
+
+def _did_you_mean(name: str, choices) -> str:
+    import difflib
+    close = difflib.get_close_matches(str(name), list(choices), n=3)
+    return f" — did you mean {', '.join(map(repr, close))}?" if close else ""
+
+
+def _factory_signature(obj: Any) -> Optional[inspect.Signature]:
+    try:
+        return inspect.signature(obj)
+    except (TypeError, ValueError):
+        return None
+
+
+def looks_like_scenario(data: Any) -> bool:
+    return isinstance(data, Mapping) and \
+        any(k in data for k in _SCENARIO_MARKERS)
+
+
+def check_file(path: str) -> List[Finding]:
+    rel = rel_path(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [Finding(CHECKER, "invalid-spec", rel, 1, 0,
+                        f"unreadable JSON: {e}",
+                        suggestion="fix the JSON syntax")]
+    if not looks_like_scenario(data):
+        return []
+    return check_spec(data, rel)
+
+
+def check_spec(data: Mapping[str, Any], rel: str) -> List[Finding]:
+    findings: List[Finding] = []
+    registries = _registries()
+
+    for fld, registry in registries.items():
+        comp = data.get(fld)
+        if comp is None:
+            continue
+        if isinstance(comp, str):
+            name, kwargs = comp, {}
+        elif isinstance(comp, Mapping):
+            unknown_keys = set(comp) - {"name", "kwargs"}
+            if unknown_keys or "name" not in comp:
+                findings.append(Finding(
+                    CHECKER, "invalid-spec", rel, 1, 0,
+                    f"component '{fld}' must be a string or "
+                    f"{{'name', 'kwargs'}}, got keys {sorted(comp)}",
+                    scope=fld,
+                    snippet=json.dumps(comp, sort_keys=True)[:120],
+                    suggestion="use {\"name\": ..., \"kwargs\": {...}}"))
+                continue
+            name, kwargs = comp["name"], dict(comp.get("kwargs") or {})
+        else:
+            findings.append(Finding(
+                CHECKER, "invalid-spec", rel, 1, 0,
+                f"component '{fld}' must be a string or dict, "
+                f"got {type(comp).__name__}", scope=fld,
+                snippet=repr(comp)[:120]))
+            continue
+
+        if name not in registry:
+            findings.append(Finding(
+                CHECKER, "unknown-component", rel, 1, 0,
+                f"unknown {fld} component {name!r} (registered: "
+                f"{sorted(registry.names())})"
+                + _did_you_mean(name, registry.names()),
+                scope=f"{fld}.{name}", snippet=f"{fld}: {name}",
+                suggestion="use a registered key, or register the component"))
+            continue
+
+        factory = registry.get(name)
+        sig = _factory_signature(factory)
+        if sig is None:
+            continue
+        injected = config.SPEC_INJECTED_KWARGS.get(fld, set())
+        params = sig.parameters
+        takes_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                           for p in params.values())
+        accepted = {pname for pname, p in params.items()
+                    if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)}
+
+        if not takes_var_kw:
+            for kw in sorted(set(kwargs) - accepted):
+                findings.append(Finding(
+                    CHECKER, "unknown-kwarg", rel, 1, 0,
+                    f"{fld} component {name!r} got unknown kwarg {kw!r} "
+                    f"(accepts: {sorted(accepted - injected)})"
+                    + _did_you_mean(kw, accepted - injected),
+                    scope=f"{fld}.{name}", snippet=f"{name}({kw}=...)",
+                    suggestion="drop or rename the kwarg to match the "
+                               "factory signature"))
+        for pname, p in params.items():
+            if p.kind in (p.VAR_POSITIONAL, p.VAR_KEYWORD):
+                continue
+            if p.default is inspect.Parameter.empty and \
+                    pname not in kwargs and pname not in injected:
+                findings.append(Finding(
+                    CHECKER, "missing-required-arg", rel, 1, 0,
+                    f"{fld} component {name!r} requires {pname!r} and the "
+                    f"spec does not provide it", scope=f"{fld}.{name}",
+                    snippet=f"{name}(...{pname}...)",
+                    suggestion=f"add {pname!r} to the component's kwargs"))
+
+    # cross-field/schema validation — only when the structured pass is clean,
+    # so one root cause doesn't surface twice
+    if not findings:
+        try:
+            _ensure_importable()
+            from repro.core.scenario import Scenario
+            Scenario.from_dict(data)
+        except (TypeError, ValueError) as e:
+            findings.append(Finding(
+                CHECKER, "invalid-spec", rel, 1, 0, str(e),
+                snippet=str(data.get("name", "")),
+                suggestion="fix the spec to satisfy Scenario.from_dict"))
+    return findings
