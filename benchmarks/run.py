@@ -6,7 +6,11 @@ Emits ``name,us_per_call,derived`` CSV rows (stdout) and JSON artifacts under
 results/.  Mapping to the paper:
 
     bench_coldstart  ->  Figs. 3, 5, 6 (cold/warm, phase breakdown)
-    bench_policies   ->  Table 2 (bulk / lazy / no-pageserver / no-lazy)
+    bench_policies   ->  prewarm x placement tournament vs the hindsight
+                         oracle (Pareto front + per-cell oracle gap), the
+                         per-spec oracle-dominance audit, and — full scale
+                         only — Table 2 (bulk / lazy / no-pageserver /
+                         no-lazy)
     bench_metadata   ->  Table 3 (metadata vs image size)
     bench_sharing    ->  Fig. 7 + 88% memory headline (Azure-trace simulation)
     bench_fleet      ->  multi-worker fleet sweep (workers x capacity x skew x
@@ -16,12 +20,14 @@ results/.  Mapping to the paper:
     bench_kernels    ->  kernel-path microbenches + VMEM accounting
     bench_roofline   ->  assignment §Roofline table (from dry-run artifacts)
 
-``--smoke`` shrinks the simulation suites (sharing, fleet) to CI size (the
-scale switch is ``benchmarks.common.set_smoke`` — one definition for the
-driver and CI) and writes ``results/BENCH_smoke.json``: the canonical perf
-baseline (per-bench wall clock + headline metrics) that CI's ``bench`` job
-uploads and band-checks (``tools/ci/check_bench.py``). The measurement
-suites (coldstart, policies, kernels, ...) always do real work.
+``--smoke`` shrinks the simulation suites (sharing, fleet, policies) to CI
+size (the scale switch is ``benchmarks.common.set_smoke`` — one definition
+for the driver and CI) and writes ``results/BENCH_smoke.json``: the
+canonical perf baseline (per-bench wall clock + headline metrics, including
+the oracle-dominance gap minima) that CI's ``bench`` job uploads and
+band-checks (``tools/ci/check_bench.py``). The measurement suites
+(coldstart, kernels, ...) always do real work; ``policies`` drops its live
+Table-2 stack under ``--smoke``.
 """
 from __future__ import annotations
 
@@ -64,6 +70,16 @@ def _headline(outs: dict) -> dict:
     if "paper_costs" in sharing:
         head["sharing_memory_saving_vs_prebaking"] = \
             sharing["paper_costs"]["memory_saving_vs_prebaking"]
+    policies = outs.get("policies") or {}
+    if "oracle_gap" in policies:
+        # the dominance headline: minimum oracle gap over every tournament
+        # cell and audited spec x method (check_bench fails on < 0 or NaN)
+        gap = policies["oracle_gap"]
+        head["oracle_gap"] = {
+            "min_total_gap_s": gap["min_total_gap_s"],
+            "min_p99_gap_s": gap["min_p99_gap_s"],
+            "n_cells": gap["n_cells"],
+        }
     return head
 
 

@@ -17,6 +17,18 @@ Tie-breaking at equal timestamps is load-bearing and encoded in the
   4. ``KEEPALIVE_EXPIRY`` — an arrival at exactly the expiry instant is still
      warm (``simulate()``'s ``t <= expiry`` contract).
 
+Disruption events (``core/disruption.py``) rank strictly AFTER every
+fair-weather kind at the same instant — new kinds are **appended** at ranks
+>= 4 so the documented [0, 1, 2, 3] tie-break above never renumbers:
+
+  5. ``WORKER_FAIL``      — a worker dying at ``t`` lets arrivals and
+     expiries at exactly ``t`` resolve first (a request arriving the instant
+     a worker fails is served or queued under fair weather, then disrupted);
+  6. ``WORKER_RECOVER``   — likewise, and a same-instant fail+recover pair
+     resolves fail-first (it was authored as a downtime of zero);
+  7. ``CACHE_FLUSH``      — an eviction storm at ``t`` evicts after every
+     same-instant cold start already admitted its image.
+
 Within one (time, kind) bucket, insertion order wins (FIFO).
 """
 from __future__ import annotations
@@ -29,11 +41,18 @@ from typing import Any, Optional, Tuple
 
 
 class EventKind(IntEnum):
-    """Heap tie-break order at equal timestamps (see module docstring)."""
+    """Heap tie-break order at equal timestamps (see module docstring).
+
+    Ranks [0, 3] are the documented fair-weather tie-break and are pinned by
+    ``tests/test_sim_properties.py``; new kinds must be appended at >= 4.
+    """
     INSTANCE_FREE = 0
     PREWARM_SPAWN = 1
     ARRIVAL = 2            # never heaped; used as the merge-comparison rank
     KEEPALIVE_EXPIRY = 3
+    WORKER_FAIL = 4        # disruption: kill a worker (core/disruption.py)
+    WORKER_RECOVER = 5     # disruption: the worker returns, pool empty
+    CACHE_FLUSH = 6        # disruption: fleet-wide shared-image eviction storm
 
 
 @dataclass(frozen=True, slots=True)

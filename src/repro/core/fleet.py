@@ -62,6 +62,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.costmodel import PageCostModel
+from repro.core.disruption import DisruptionSchedule
 from repro.core.events import EventKind, EventQueue
 from repro.core.keepalive import PREWARM_POLICIES, PrewarmPolicy
 from repro.core.pool import CapacityLedger, ClusterImageCache
@@ -75,6 +76,9 @@ _FREE = int(EventKind.INSTANCE_FREE)
 _SPAWN = int(EventKind.PREWARM_SPAWN)
 _ARRIVAL = int(EventKind.ARRIVAL)
 _EXPIRY = int(EventKind.KEEPALIVE_EXPIRY)
+_FAIL = int(EventKind.WORKER_FAIL)
+_RECOVER = int(EventKind.WORKER_RECOVER)
+_FLUSH = int(EventKind.CACHE_FLUSH)
 
 
 @dataclass
@@ -113,6 +117,11 @@ class FleetConfig:
                                                  # capacity (distinct images);
                                                  # None = unbounded; needs
                                                  # page_cost
+    disruption: Optional[DisruptionSchedule] = None
+                                                 # worker churn / preemption /
+                                                 # eviction-storm schedule
+                                                 # (core/disruption.py); its
+                                                 # n_workers must match
 
 
 @dataclass(slots=True)
@@ -124,11 +133,17 @@ class _Instance:
     prewarmed: bool = False
     gen: int = 0             # expiry generation: stale expiry events carry an
                              #   older gen and are dropped on arrival
+    killed: bool = False     # worker died: pending free/expiry events for
+                             #   this instance are stale and must be ignored
+    cur_idx: int = -1        # request index currently (or last) served —
+    cur_req_t: float = 0.0   #   and its original arrival time, so a worker
+                             #   failure can requeue the in-flight request
 
 
 class _Worker:
     __slots__ = ("idx", "ledger", "instances", "queues", "metadata_fns",
-                 "n_served", "instance_min", "in_flight", "queued_now")
+                 "n_served", "instance_min", "in_flight", "queued_now",
+                 "failed")
 
     def __init__(self, idx: int, capacity_bytes: Optional[int]):
         self.idx = idx
@@ -136,6 +151,7 @@ class _Worker:
         self.instances: Dict[int, List[_Instance]] = {}
         self.queues: Dict[int, Deque[Tuple[float, int]]] = {}  # fn -> (t, req idx)
         self.metadata_fns: set = set()
+        self.failed = False          # down due to a disruption worker_fail
         self.n_served = 0
         self.instance_min = 0.0      # total warm-instance residency (minutes)
         self.in_flight = 0           # requests currently executing; maintained
@@ -206,6 +222,15 @@ class FleetResult:
     shared_cache_peak_bytes: int = 0     # distinct-image bytes in the cluster
                                          #   tier, high-water mark
     shared_cache_evictions: int = 0      # cluster-wide capacity evictions
+    worker_failures: int = 0             # disruption worker_fail events applied
+    worker_recoveries: int = 0           # disruption worker_recover events
+    cache_flushes: int = 0               # disruption cache_flush storms applied
+    requeued: int = 0                    # requests re-submitted by failures
+                                         #   (in-flight + queued on the dead
+                                         #   worker); under disruption,
+                                         #   n_cold + n_warm counts SERVICE
+                                         #   STARTS and can exceed
+                                         #   n_invocations by up to this
     pages_transferred: int = 0           # pages moved over the NETWORK (remote
                                          #   + source links; local memcpy not
                                          #   counted) by page-model cold starts
@@ -305,6 +330,12 @@ def _simulate_fleet_impl(
     if fleet.shared_cache_bytes is not None and fleet.page_cost is None:
         raise ValueError("shared_cache_bytes bounds the page-model cluster "
                          "tier; set FleetConfig.page_cost to enable it")
+    disruption = fleet.disruption
+    if disruption is not None and disruption.n_workers != fleet.n_workers:
+        raise ValueError(
+            f"disruption schedule was built for "
+            f"{disruption.n_workers} worker(s) but the fleet has "
+            f"{fleet.n_workers}; rebuild it with the fleet's shape")
     # deferred: repro.serving pulls in the model/engine stack, which a
     # simulation-only import of repro.core should not pay for
     from repro.serving.scheduler import (PLACEMENTS, PlacementContext,
@@ -324,6 +355,12 @@ def _simulate_fleet_impl(
     cap = fleet.max_instances_per_fn
     workers = [_Worker(i, fleet.worker_capacity_bytes)
                for i in range(fleet.n_workers)]
+    # placement only ever routes over the LIVE workers; rebound (not mutated)
+    # by the worker_fail / worker_recover handlers, so the fair-weather path
+    # never pays a per-arrival liveness scan
+    live = workers
+    orphans: List[Tuple[float, int, int]] = []   # (req_t, idx, fn) waiting for
+                                                 #   ANY worker to come back
     fn_image = {t.fn_index: t.image_id for t in traces}
     images = sorted({t.image_id for t in traces})
 
@@ -397,7 +434,15 @@ def _simulate_fleet_impl(
     waits = np.full(n_req, np.nan)
     events = EventQueue()
     push = events.push
-    arrival_seq = 0                    # round-robin rotates per ARRIVAL; queued
+    # Disruption events enter the heap up front at ranks > every fair-weather
+    # kind (events.py): at equal timestamps a failure strikes only after the
+    # arrivals/completions of that instant resolve.
+    if disruption is not None:
+        _KIND_INT = {"worker_fail": _FAIL, "worker_recover": _RECOVER,
+                     "cache_flush": _FLUSH}
+        for dev in disruption.events:
+            push(dev.t_min, _KIND_INT[dev.kind], dev.worker)
+    arrival_seq = 0                   # round-robin rotates per ARRIVAL; queued
                                        #   requests must not stall the rotation
     # hot-loop counters (folded into ``res`` after the loop): locals are
     # cheaper than dataclass attribute updates at millions of requests
@@ -475,7 +520,7 @@ def _simulate_fleet_impl(
             cur[0], cur[1], cur[2] = fn, t, key
             warm_cache.clear()
             ctx.fn, ctx.t_min, ctx.arrival_seq = fn, t, arrival_seq
-            w = strategy(workers, ctx)
+            w = strategy(live, ctx)
             inst = warm_cache.get(w.idx)
             if inst is None:               # strategy may ignore the warm scan
                 inst = w.idle_instance(fn, t)
@@ -571,6 +616,8 @@ def _simulate_fleet_impl(
                                     inst.fn, image_bytes=idle_bytes))
         inst.expires = expires
         inst.gen += 1
+        inst.cur_idx = idx
+        inst.cur_req_t = req_t
         push(busy_until, _FREE, (w, inst))
         push(expires, _EXPIRY, (w, inst, inst.gen))
         w.n_served += 1
@@ -594,11 +641,16 @@ def _simulate_fleet_impl(
         for w in workers:
             if w.alive(fn):
                 return                 # something is already warm; don't double-spawn
+        if not live:
+            # every worker is down: account the spawn as dropped, like a
+            # past-horizon spawn, rather than silently losing it
+            res.prewarm_dropped += 1
+            return
         # pre-warm spawns always use affinity-shaped placement (no instance
         # is warm yet, so only the residency/transfer signal discriminates);
         # spawns are rare, so this context is built fresh rather than shared
         cur[2] = key = resident_key(fn)
-        w = place_invocation(workers, PlacementContext(
+        w = place_invocation(live, PlacementContext(
             load=_load_signal, queue_depth=_queue_signal,
             fn=fn, t_min=t, arrival_seq=arrival_seq, **_residency_signals()))
         if method != "baseline":
@@ -616,6 +668,12 @@ def _simulate_fleet_impl(
         nonlocal arrival_seq, n_cold_c, n_warm_c, max_conc
         if not trivial_policy:
             policy.on_arrival(fn, t)
+        if not live:
+            # every worker is down: park the request; the next
+            # worker_recover event re-dispatches it (wait accrues from t)
+            orphans.append((t, idx, fn))
+            arrival_seq += 1
+            return
         w, key, inst = pick_worker(fn, t)
         arrival_seq += 1
         if inst is not None:
@@ -648,10 +706,112 @@ def _simulate_fleet_impl(
             if window is not None:
                 push(window[0], _SPAWN, (fn, window[1]))
 
+    def redispatch(t: float, req_t: float, fn: int, idx: int) -> None:
+        """Re-submit a request displaced by a worker failure at time ``t``,
+        keeping its ORIGINAL arrival time ``req_t`` so the time lost to the
+        failure lands in its queue wait (``begin_service`` overwrites the
+        request's sample slot). Mirrors ``handle_arrival``'s dispatch, but a
+        re-dispatch is not an arrival: the policy sees no new arrival and
+        the round-robin rotation does not advance."""
+        nonlocal n_cold_c, n_warm_c, max_conc
+        if not live:
+            orphans.append((req_t, idx, fn))
+            return
+        w, key, inst = pick_worker(fn, t)
+        if inst is not None:
+            n_warm_c += 1
+            if inst.prewarmed:
+                res.prewarm_hits += 1
+                inst.prewarmed = False
+            begin_service(w, inst, t, warm_s, req_t, idx)
+            return
+        alive = w.instances.get(fn)
+        if alive and cap is not None and len(alive) >= cap:
+            w.queues.setdefault(fn, deque()).append((req_t, idx))
+            w.queued_now += 1
+            return
+        svc = cold_start(w, fn, key, t)
+        n_cold_c += 1
+        inst = _Instance(fn, busy_until=t, expires=t, created=t)
+        if alive is None:
+            w.instances[fn] = [inst]
+        else:
+            alive.append(inst)
+        n_alive = sum(len(ww.alive(fn)) for ww in workers)
+        if n_alive > max_conc:
+            max_conc = n_alive
+        begin_service(w, inst, t, svc, req_t, idx)
+
+    def fail_worker(t: float, w_idx: int) -> None:
+        nonlocal live
+        w = workers[w_idx]
+        if w.failed:
+            return
+        w.failed = True
+        live = [ww for ww in workers if not ww.failed]
+        res.worker_failures += 1
+        # Displaced requests: the worker's in-flight requests plus its queue,
+        # re-dispatched in (original arrival time, request index) order — a
+        # deterministic total order, since request indices are unique.
+        pending: List[Tuple[float, int, int]] = []
+        for insts in w.instances.values():
+            for inst in insts:
+                inst.killed = True     # pending free/expiry events are stale
+                w.instance_min += max(0.0, min(t, horizon) - inst.created)
+                if inst.busy_until > t and inst.cur_idx >= 0:
+                    pending.append((inst.cur_req_t, inst.cur_idx, inst.fn))
+        for fn, q in w.queues.items():
+            for req_t, idx in q:
+                pending.append((req_t, idx, fn))
+        w.instances.clear()
+        w.queues.clear()
+        w.in_flight = 0
+        w.queued_now = 0
+        # the pool dies with the worker (propagated to the cluster tier — the
+        # shared tier is the union of worker pools); a recovered worker
+        # re-warms through the normal cold-start path
+        for key in list(w.ledger.entries):
+            w.ledger.evict(key)
+            if cluster is not None:
+                cluster.worker_evicted(w.idx, key)
+        w.metadata_fns.clear()
+        pending.sort()
+        res.requeued += len(pending)
+        for req_t, idx, fn in pending:
+            redispatch(t, req_t, fn, idx)
+
+    def recover_worker(t: float, w_idx: int) -> None:
+        nonlocal live
+        w = workers[w_idx]
+        if not w.failed:
+            return
+        w.failed = False
+        live = [ww for ww in workers if not ww.failed]
+        res.worker_recoveries += 1
+        if orphans:
+            drain = sorted(orphans)
+            orphans.clear()
+            for req_t, idx, fn in drain:
+                redispatch(t, req_t, fn, idx)
+
+    def flush_caches(t: float) -> None:
+        """Shared-image eviction storm: every pool resident leaves every
+        worker (and, via the holder sets, the cluster tier). Warm instances
+        keep running — a cache eviction does not kill containers — so only
+        subsequent cold starts feel it (revive / remote / source miss)."""
+        res.cache_flushes += 1
+        for w in workers:
+            for key in list(w.ledger.entries):
+                w.ledger.evict(key)
+                if cluster is not None:
+                    cluster.worker_evicted(w.idx, key)
+
     def handle_event(ev_t: float, kind: int, payload) -> None:
         nonlocal n_warm_c
         if kind == _FREE:
             w, inst = payload
+            if inst.killed:
+                return                 # the worker died mid-service
             w.in_flight -= 1
             if not trivial_policy:
                 policy.on_completion(inst.fn, ev_t)
@@ -664,10 +824,16 @@ def _simulate_fleet_impl(
         elif kind == _SPAWN:
             fn, expire_at = payload
             spawn_prewarm(ev_t, fn, expire_at)
-        else:                          # KEEPALIVE_EXPIRY
+        elif kind == _EXPIRY:
             w, inst, gen = payload
-            if inst.gen == gen:        # else: superseded by a later reuse
-                retire(w, inst)
+            if inst.gen == gen and not inst.killed:
+                retire(w, inst)        # else: superseded or worker died
+        elif kind == _FAIL:
+            fail_worker(ev_t, payload)
+        elif kind == _RECOVER:
+            recover_worker(ev_t, payload)
+        else:                          # CACHE_FLUSH
+            flush_caches(ev_t)
 
     # ---------------------------------------------------------------- event loop
     # Merge the pre-sorted arrival stream against the event-heap head. The
@@ -692,6 +858,11 @@ def _simulate_fleet_impl(
         handle_arrival(all_t_list[i], all_fn_list[i], i)
         i += 1
 
+    if orphans:
+        raise RuntimeError(
+            f"{len(orphans)} request(s) were still orphaned when the event "
+            f"loop drained: the disruption schedule leaves every worker "
+            f"failed with no recovery before the end of the trace")
     if n_req and np.isnan(samples).any():
         raise RuntimeError("fleet engine dropped requests: unfilled latency "
                            "samples after the event loop drained")

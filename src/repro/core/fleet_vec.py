@@ -147,6 +147,14 @@ def fast_path_reason(traces: List[Trace], method: str, cost: CostModel,
     if isinstance(fleet.placement, str):
         from repro.serving.scheduler import PLACEMENTS
         PLACEMENTS.build(fleet.placement)   # unknown-key parity with the engine
+    if fleet.disruption is not None and fleet.disruption.events:
+        if fleet.disruption.n_workers != fleet.n_workers:
+            raise ValueError(
+                f"disruption schedule was built for "
+                f"{fleet.disruption.n_workers} worker(s) but the fleet has "
+                f"{fleet.n_workers}; rebuild it with the fleet's shape")
+        return ("fleet disruption schedule: worker churn and eviction "
+                "storms couple all request streams")
     policy = _make_policy(fleet)
     if type(policy) is not PrewarmPolicy:
         return "non-trivial pre-warm policy: spawn placement reads fleet load"

@@ -27,6 +27,8 @@ instances; unknown keys fail with did-you-mean suggestions):
   ``placement``        ``serving.scheduler.PLACEMENTS``        affinity,
                                                                least_loaded,
                                                                round_robin
+  ``disruption``       ``disruption.DISRUPTIONS``              churn, preempt,
+                                                               storm
   ===================  ======================================  =============
 
 The legacy imperative surface is preserved as thin wrappers: both
@@ -51,6 +53,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.costmodel import PAGE_COST_MODELS, PageCostModel
+from repro.core.disruption import DISRUPTIONS
 from repro.core.keepalive import PREWARM_POLICIES, KeepAlivePolicy
 from repro.core.registry import did_you_mean as _did_you_mean
 from repro.core.simulator import (COST_MODELS, CostModel,
@@ -139,6 +142,7 @@ class Scenario:
     max_instances_per_fn: Optional[int] = None
     worker_capacity_bytes: Optional[int] = None
     shared_cache_bytes: Optional[int] = None
+    disruption: Optional[ComponentSpec] = None   # churn | preempt | storm
     keep_alive_min: float = 15.0
     shared_images: int = 1                   # single-engine memory model
     smoke_overrides: Dict[str, Any] = field(default_factory=dict)
@@ -149,6 +153,9 @@ class Scenario:
             setattr(self, f, ComponentSpec.coerce(getattr(self, f), f))
         if self.page_cost is not None:
             self.page_cost = ComponentSpec.coerce(self.page_cost, "page_cost")
+        if self.disruption is not None:
+            self.disruption = ComponentSpec.coerce(self.disruption,
+                                                   "disruption")
         self.methods = list(self.methods)
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine: {self.engine!r} (choose from "
@@ -168,6 +175,7 @@ class Scenario:
                 ("max_instances_per_fn", self.max_instances_per_fn is None),
                 ("worker_capacity_bytes", self.worker_capacity_bytes is None),
                 ("shared_cache_bytes", self.shared_cache_bytes is None),
+                ("disruption", self.disruption is None),
                 ("placement", self.placement == ComponentSpec("affinity")),
                 ("prewarm", self.prewarm == ComponentSpec("none")),
             ) if not is_default]
@@ -190,6 +198,8 @@ class Scenario:
         COST_MODELS.resolve(self.cost.name)
         if self.page_cost is not None:
             PAGE_COST_MODELS.resolve(self.page_cost.name)
+        if self.disruption is not None:
+            DISRUPTIONS.resolve(self.disruption.name)
         PREWARM_POLICIES.resolve(self.prewarm.name)
 
     def validate_components(self) -> None:
@@ -544,6 +554,15 @@ def run(scenario: Scenario, *, smoke: bool = False,
             prewarm = (scn.prewarm.name if not scn.prewarm.kwargs
                        else PREWARM_POLICIES.build(scn.prewarm.name,
                                                    **scn.prewarm.kwargs))
+            disruption = None
+            if scn.disruption is not None:
+                # schedule factories take the runtime-injected fleet shape:
+                # the worker count and the trace horizon (last arrival)
+                horizon = max((float(t.arrivals_min[-1]) for t in traces
+                               if len(t.arrivals_min)), default=0.0)
+                disruption = DISRUPTIONS.build(
+                    scn.disruption.name, n_workers=scn.n_workers,
+                    horizon_min=horizon, **scn.disruption.kwargs)
             fleet_cfg = FleetConfig(
                 n_workers=scn.n_workers,
                 placement=placement,
@@ -553,6 +572,7 @@ def run(scenario: Scenario, *, smoke: bool = False,
                 keep_alive_min=scn.keep_alive_min,
                 page_cost=page,
                 shared_cache_bytes=scn.shared_cache_bytes,
+                disruption=disruption,
             )
         if scn.engine == "fleet_vec":
             from repro.core.fleet_vec import simulate_fleet_vec

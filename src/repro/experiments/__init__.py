@@ -6,6 +6,7 @@
     PYTHONPATH=src python -m repro.experiments sweep spec.json --axis traces.kwargs.seed=0,1,2,3 \\
         --parallel 4 --store results/sweep.jsonl --resume
     PYTHONPATH=src python -m repro.experiments report results/sweep.jsonl
+    PYTHONPATH=src python -m repro.experiments tournament benchmarks/scenarios/tournament.json --smoke
     PYTHONPATH=src python -m repro.experiments validate benchmarks/scenarios/*.json
     PYTHONPATH=src python -m repro.experiments smoke benchmarks/scenarios/*.json
     PYTHONPATH=src python -m repro.experiments list
@@ -149,6 +150,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_report.add_argument("--out", default=None,
                           help="write the summary JSON here")
 
+    p_tour = sub.add_parser(
+        "tournament", help="sweep every registered prewarm x placement over "
+                           "one spec, score each cell against the hindsight "
+                           "oracle, and mark the Pareto front")
+    p_tour.add_argument("spec")
+    p_tour.add_argument("--smoke", action="store_true",
+                        help="apply the spec's smoke_overrides (CI scale)")
+    p_tour.add_argument("--out", default=None,
+                        help="write the tournament report JSON here")
+    p_tour.add_argument("--parallel", type=int, default=1, metavar="N")
+    p_tour.add_argument("--store", default=None, metavar="PATH",
+                        help="JSONL results store for the underlying sweep "
+                             "(resumable)")
+    p_tour.add_argument("--resume", action="store_true",
+                        help="skip grid points already in --store")
+
     p_val = sub.add_parser("validate", help="load + schema-check specs")
     p_val.add_argument("specs", nargs="+")
 
@@ -213,6 +230,31 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         _write(args.out, summary)
         return 0
 
+    if args.command == "tournament":
+        from repro.experiments.tournament import run_tournament
+        def progress(done, total, point, skipped):
+            verb = "skipped (stored)" if skipped else "done"
+            print(f"[{done}/{total}] {point.name}: {verb}", file=sys.stderr)
+
+        rep = run_tournament(Scenario.from_file(args.spec), smoke=args.smoke,
+                             parallel=args.parallel, store_path=args.store,
+                             resume=args.resume, progress=progress)
+        for c in rep.cells:
+            star = "*" if c.pareto else " "
+            print(f"{star} {c.method:9s} prewarm={c.prewarm:9s} "
+                  f"placement={c.placement:12s} "
+                  f"p99 {c.p99_s * 1e3:9.2f} ms | "
+                  f"byte-min {c.byte_minutes / 1e9:9.3f} GB-min | "
+                  f"cold {c.n_cold:6d} | "
+                  f"gap {c.oracle_gap_total_s:9.3f} s")
+        for m, g in rep.min_gaps().items():
+            print(f"{m}: min total gap {g['min_total_gap_s']:.6f} s, "
+                  f"min p99 gap {g['min_p99_gap_s']:.6f} s over "
+                  f"{g['n_cells']} cells (* = Pareto front)",
+                  file=sys.stderr)
+        _write(args.out, rep.to_dict())
+        return 0
+
     if args.command == "validate":
         for path in args.specs:
             scn = Scenario.from_file(path)
@@ -230,12 +272,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.command == "list":
         from repro.core.costmodel import PAGE_COST_MODELS
+        from repro.core.disruption import DISRUPTIONS
         from repro.core.keepalive import PREWARM_POLICIES
         from repro.core.simulator import COST_MODELS
         from repro.core.traces import TRACE_GENERATORS
         from repro.serving.scheduler import PLACEMENTS
         for reg in (TRACE_GENERATORS, COST_MODELS, PAGE_COST_MODELS,
-                    PREWARM_POLICIES, PLACEMENTS):
+                    PREWARM_POLICIES, PLACEMENTS, DISRUPTIONS):
             print(f"{reg.kind}: {', '.join(reg.names())}")
         print("workload: (import repro.core.workloads to list — pulls in "
               "the JAX model stack)")

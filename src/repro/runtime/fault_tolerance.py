@@ -175,3 +175,36 @@ class ReplicaSet:
         """Replace a failed replica; returns bring-up seconds. 'warmswap' re-warms
         from the dependency pool; 'baseline' cold-loads + recompiles."""
         return self._spawn(name, method=method)
+
+
+def replay_disruption(replicas: ReplicaSet, schedule,
+                      method: str = "warmswap") -> List[RecoveryEvent]:
+    """Replay a simulator disruption schedule against a live :class:`ReplicaSet`.
+
+    This is the bridge between the fleet simulator's foul-weather axes
+    (``core/disruption.py``) and the runtime recovery story measured here:
+    the same :class:`~repro.core.disruption.DisruptionSchedule` a
+    ``FleetConfig`` replays as timed events is applied to real replicas —
+    worker ``i`` maps to ``"replica-{i}"`` — so the simulated churn scenario
+    and the live pool-backed recovery claim share one schedule artifact.
+
+    Events are applied in schedule order (already time-sorted), collapsed to
+    their effects: ``worker_fail`` kills the replica, ``worker_recover``
+    re-warms it via ``recover(..., method)``, and ``cache_flush`` is a
+    no-op here (the live pool has no fleet-wide eviction hook; the
+    simulator prices that axis). Wall-clock timing is *not* reproduced —
+    only the event sequence is.
+
+    Returns the :class:`RecoveryEvent` list for the recoveries this replay
+    itself triggered (bring-up seconds per re-warm), in order.
+    """
+    before = len(replicas.events)
+    for ev in schedule.events:
+        name = f"replica-{ev.worker}"
+        if ev.kind == "worker_fail":
+            replicas.kill(name)
+        elif ev.kind == "worker_recover":
+            replicas.recover(name, method=method)
+        # cache_flush: no live-pool analogue; simulator-only axis
+    with replicas._lock:
+        return list(replicas.events[before:])

@@ -21,6 +21,8 @@ def bench_artifact(**overrides):
         "azure_scale_wall_clock_s": 30.0,
         "azure_scale_xl_n_invocations": 12_000_000,
         "azure_scale_xl_wall_clock_s": 40.0,
+        "oracle_gap": {"min_total_gap_s": 1.5, "min_p99_gap_s": 0.01,
+                       "n_cells": 67},
     }
     head.update(overrides)
     return {"bench_schema_version": 1,
@@ -43,11 +45,24 @@ def test_check_bench_passes_in_band(tmp_path):
     ({"dependency_loading_speedup": 5.0}, "speedup"),
     ({"azure_scale_n_invocations": 10}, "invocations"),
     ({"azure_scale_xl_wall_clock_s": 300.0}, "vectorized engine"),
+    ({"oracle_gap": {"min_total_gap_s": -0.1, "min_p99_gap_s": 0.0,
+                     "n_cells": 5}}, "dominance invariant"),
+    ({"oracle_gap": {"min_total_gap_s": 0.0, "min_p99_gap_s": math.nan,
+                     "n_cells": 5}}, "finite"),
+    ({"oracle_gap": {"min_total_gap_s": 0.0, "min_p99_gap_s": 0.0,
+                     "n_cells": 0}}, "no cells"),
 ])
 def test_check_bench_fails_out_of_band(tmp_path, overrides, fragment):
     path = write(tmp_path, bench_artifact(**overrides))
     with pytest.raises(AssertionError, match=fragment):
         check_bench.main(path)
+
+
+def test_check_bench_requires_oracle_gap_block(tmp_path):
+    data = bench_artifact()
+    del data["headline"]["oracle_gap"]
+    with pytest.raises(KeyError):
+        check_bench.main(write(tmp_path, data))
 
 
 def test_check_bench_fails_on_failed_cell(tmp_path):

@@ -1,0 +1,311 @@
+"""Disruption semantics: worker churn / preemption / eviction storms through
+the fleet engine (core/disruption.py + core/fleet.py), pinned against the
+normative contract in docs/SIMULATION.md, "Oracle and disruption semantics":
+
+  * a failed worker's in-flight and queued requests are re-queued with their
+    ORIGINAL arrival times — time lost to the failure lands in queue wait;
+  * under disruption ``n_cold + n_warm`` counts service STARTS
+    (``n_invocations + requeued``), and the disruption counters mirror the
+    schedule that was applied;
+  * a schedule that leaves every worker dead with requests parked raises
+    (silently dropping arrivals would corrupt every latency percentile);
+  * cache flushes evict pools (cluster tier included) but never kill warm
+    instances — only later cold starts pay;
+  * the vectorized engine declares disruption out of its fast-path domain
+    (``fast_path_reason``) and falls back to the event engine, so both
+    engines agree bit-for-bit;
+  * ``runtime.fault_tolerance.replay_disruption`` applies the same schedule
+    artifact to a live ReplicaSet (worker i -> "replica-i").
+"""
+import numpy as np
+import pytest
+
+from repro.core.disruption import (DISRUPTIONS, DisruptionEvent,
+                                   DisruptionSchedule)
+from repro.core.events import EventKind
+from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+from repro.core.fleet_vec import fast_path_reason, simulate_fleet_vec
+from repro.core.scenario import Scenario, run
+from repro.core.simulator import CostModel, method_cold_latency_s
+from repro.core.traces import Trace, generate_fleet_traces
+from repro.runtime import ReplicaSet
+from repro.runtime.fault_tolerance import replay_disruption
+
+CM = CostModel.paper_table2()
+
+ENGINES = [("fleet", _simulate_fleet_impl), ("fleet_vec", simulate_fleet_vec)]
+
+
+def _trace(fn, arrivals, image_id=0):
+    return Trace(fn, 1.0, np.asarray(arrivals, np.float64), image_id=image_id)
+
+
+# ---------------------------------------------------------------------------------
+# Event kinds and schedule construction
+# ---------------------------------------------------------------------------------
+
+def test_disruption_event_ranks_pinned():
+    """Disruption kinds are appended AFTER the fair-weather ranks — at one
+    timestamp a failure fires after arrivals, so a request arriving at the
+    failure instant is admitted first and then displaced (deterministic)."""
+    assert [EventKind.WORKER_FAIL, EventKind.WORKER_RECOVER,
+            EventKind.CACHE_FLUSH] == [4, 5, 6]
+    assert EventKind.KEEPALIVE_EXPIRY < EventKind.WORKER_FAIL
+
+
+def test_schedule_validates_and_sorts():
+    with pytest.raises(ValueError, match="unknown disruption event kind"):
+        DisruptionEvent(1.0, "meteor", 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        DisruptionEvent(-1.0, "worker_fail", 0)
+    with pytest.raises(ValueError, match="targets worker 3"):
+        DisruptionSchedule([DisruptionEvent(1.0, "worker_fail", 3)],
+                           n_workers=2)
+    # cache_flush is fleet-wide: its worker index is not validated
+    DisruptionSchedule([DisruptionEvent(1.0, "cache_flush")], n_workers=2)
+    sch = DisruptionSchedule(
+        [DisruptionEvent(5.0, "worker_recover", 0),
+         DisruptionEvent(1.0, "worker_fail", 0)], n_workers=1)
+    assert [e.t_min for e in sch.events] == [1.0, 5.0]
+    assert len(sch) == 2 and bool(sch)
+    assert not DisruptionSchedule([], n_workers=1)
+
+
+def test_factories_are_deterministic_and_bounded():
+    a = DISRUPTIONS.build("churn", n_workers=4, horizon_min=1440.0, seed=3)
+    b = DISRUPTIONS.build("churn", n_workers=4, horizon_min=1440.0, seed=3)
+    assert a.events == b.events
+    assert a.events != DISRUPTIONS.build("churn", n_workers=4,
+                                         horizon_min=1440.0, seed=4).events
+    fails = [e for e in a.events if e.kind == "worker_fail"]
+    recovers = [e for e in a.events if e.kind == "worker_recover"]
+    assert len(fails) == len(recovers) >= 1
+    assert all(e.t_min < 1440.0 for e in fails)      # recoveries may overrun
+
+    pre = DISRUPTIONS.build("preempt", n_workers=4, horizon_min=100.0,
+                            workers=[1, 3], downtime_min=5.0)
+    assert sorted(e.worker for e in pre.events if e.kind == "worker_fail") \
+        == [1, 3]
+    assert {e.t_min for e in pre.events} == {50.0, 55.0}
+
+    st = DISRUPTIONS.build("storm", n_workers=2, horizon_min=100.0,
+                           first_at_frac=0.25, count=3)
+    assert [e.kind for e in st.events] == ["cache_flush"] * 3
+    assert st.events[0].t_min == 25.0
+    with pytest.raises(ValueError, match="count"):
+        DISRUPTIONS.build("storm", n_workers=2, horizon_min=100.0, count=0)
+    with pytest.raises(ValueError, match="period_min"):
+        DISRUPTIONS.build("storm", n_workers=2, horizon_min=100.0,
+                          period_min=-1.0)
+
+
+# ---------------------------------------------------------------------------------
+# Requeue semantics (both engines)
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,impl", ENGINES)
+def test_requeue_preserves_original_arrival_time(engine, impl):
+    """One request, killed mid-service, re-served after recovery: its latency
+    sample is EXACTLY (recovery delay as queue wait) + (a fresh pool-miss
+    cold start) — the documented accounting, float-for-float."""
+    traces = [_trace(0, [0.0])]
+    sch = DisruptionSchedule(
+        [DisruptionEvent(0.005, "worker_fail", 0),
+         DisruptionEvent(0.01, "worker_recover", 0)], n_workers=1)
+    r = impl(traces, "warmswap", CM,
+             FleetConfig(n_workers=1, disruption=sch))
+    want_wait = (0.01 - 0.0) * 60.0
+    want_svc = method_cold_latency_s(CM, "warmswap") + CM.image_revive_s
+    assert r.n_invocations == 1
+    assert r.requeued == 1, engine
+    assert (r.worker_failures, r.worker_recoveries) == (1, 1)
+    # service starts: the killed first attempt + the post-recovery restart
+    assert (r.n_cold, r.n_warm) == (2, 0), engine
+    assert float(r.queue_wait_s[0]) == want_wait, engine
+    assert float(r.latency_samples_s[0]) == want_wait + want_svc, engine
+    assert r.n_queued == 1
+
+
+@pytest.mark.parametrize("method", ["warmswap", "prebaking", "baseline"])
+def test_service_start_accounting_under_churn(method):
+    """The books balance under heavy churn: every requeue adds exactly one
+    extra service start, waits stay non-negative, samples stay finite."""
+    traces = generate_fleet_traces(n_functions=6, horizon_min=240.0, seed=11,
+                                   n_images=2, total_rate_per_min=6.0)
+    sch = DISRUPTIONS.build("churn", n_workers=3, horizon_min=240.0, seed=2,
+                            mean_uptime_min=30.0, downtime_min=5.0)
+    assert sch.events, "churn drew no failures — the case tests nothing"
+    r = _simulate_fleet_impl(traces, method, CM,
+                             FleetConfig(n_workers=3, disruption=sch))
+    assert r.n_cold + r.n_warm == r.n_invocations + r.requeued
+    assert r.worker_failures >= 1
+    assert r.worker_failures == r.worker_recoveries
+    assert (r.queue_wait_s >= 0.0).all()
+    assert np.isfinite(r.latency_samples_s).all()
+    assert (r.latency_samples_s >= r.queue_wait_s).all()
+    assert r.instance_resident_min >= 0.0
+
+
+@pytest.mark.parametrize("engine,impl", ENGINES)
+def test_unrecovered_schedule_raises(engine, impl):
+    """Every worker dead with requests parked and no recovery coming is a
+    spec bug, not a silent drop."""
+    traces = [_trace(0, [0.0, 1.0])]
+    sch = DisruptionSchedule([DisruptionEvent(0.5, "worker_fail", 0)],
+                             n_workers=1)
+    with pytest.raises(RuntimeError, match="orphaned"):
+        impl(traces, "warmswap", CM, FleetConfig(n_workers=1, disruption=sch))
+
+
+@pytest.mark.parametrize("engine,impl", ENGINES)
+def test_schedule_shape_mismatch_raises(engine, impl):
+    traces = [_trace(0, [0.0])]
+    sch = DisruptionSchedule([DisruptionEvent(1.0, "worker_fail", 0)],
+                             n_workers=2)
+    with pytest.raises(ValueError, match="rebuild it with the fleet's shape"):
+        impl(traces, "warmswap", CM, FleetConfig(n_workers=4, disruption=sch))
+
+
+# ---------------------------------------------------------------------------------
+# Eviction storms
+# ---------------------------------------------------------------------------------
+
+def test_cache_flush_spares_warm_instances_but_costs_later_colds():
+    """A flush between two warm-window arrivals changes nothing for the warm
+    serve (instances survive eviction); the post-expiry cold start pays the
+    revive the flush destroyed."""
+    traces = [_trace(0, [0.0, 1.0, 20.0])]
+    flush = DisruptionSchedule([DisruptionEvent(0.5, "cache_flush")],
+                               n_workers=1)
+    fair = _simulate_fleet_impl(traces, "warmswap", CM,
+                                FleetConfig(n_workers=1, keep_alive_min=15.0))
+    hit = _simulate_fleet_impl(
+        traces, "warmswap", CM,
+        FleetConfig(n_workers=1, keep_alive_min=15.0, disruption=flush))
+    # setup seeds the pool, so fair weather never misses
+    assert (fair.n_cold, fair.n_warm, fair.pool_misses) == (2, 1, 0)
+    assert (hit.n_cold, hit.n_warm) == (2, 1)          # instances survived
+    assert hit.cache_flushes == 1
+    assert hit.pool_misses == 1                         # t=20 cold re-misses
+    assert hit.total_latency_s == pytest.approx(
+        fair.total_latency_s + CM.image_revive_s)
+    assert hit.requeued == 0 and hit.worker_failures == 0
+
+
+# ---------------------------------------------------------------------------------
+# Engine agreement and determinism
+# ---------------------------------------------------------------------------------
+
+_DISRUPTION_KWARGS = {
+    "churn": {"seed": 5, "mean_uptime_min": 60.0, "downtime_min": 10.0},
+    "preempt": {"at_frac": 0.5, "kill_frac": 0.5, "downtime_min": 15.0},
+    "storm": {"first_at_frac": 0.25, "count": 2},
+}
+
+_COUNTERS = ("n_invocations", "n_cold", "n_warm", "n_queued", "pool_misses",
+             "evictions", "requeued", "worker_failures", "worker_recoveries",
+             "cache_flushes", "prewarm_spawns", "prewarm_hits",
+             "max_concurrent_instances")
+
+
+@pytest.mark.parametrize("name", sorted(_DISRUPTION_KWARGS))
+def test_vec_engine_identical_under_disruption(name):
+    """Disruption forces the vectorized engine onto its exact event-engine
+    fallback — declared via ``fast_path_reason`` — so results agree
+    bit-for-bit, counters included."""
+    traces = generate_fleet_traces(n_functions=8, horizon_min=240.0, seed=9,
+                                   n_images=3, total_rate_per_min=8.0)
+    sch = DISRUPTIONS.build(name, n_workers=4, horizon_min=240.0,
+                            **_DISRUPTION_KWARGS[name])
+    assert sch.events
+    fc = lambda: FleetConfig(n_workers=4, disruption=sch)
+    reason = fast_path_reason(traces, "warmswap", CM, fc())
+    assert reason is not None and "disruption" in reason
+    ref = _simulate_fleet_impl(traces, "warmswap", CM, fc())
+    vec = simulate_fleet_vec(traces, "warmswap", CM, fc())
+    for fld in ("latency_samples_s", "queue_wait_s", "sample_fn"):
+        assert np.array_equal(getattr(ref, fld), getattr(vec, fld)), fld
+    for fld in _COUNTERS:
+        assert getattr(ref, fld) == getattr(vec, fld), fld
+    assert ref.total_latency_s == vec.total_latency_s
+    assert ref.instance_resident_min == vec.instance_resident_min
+
+
+def test_empty_schedule_keeps_fast_path_domain():
+    """An empty schedule is fair weather: it must not push a config off the
+    vectorized fast path (whatever that verdict is without disruption)."""
+    traces = generate_fleet_traces(n_functions=4, horizon_min=60.0, seed=1)
+    empty = DisruptionSchedule([], n_workers=1)
+    assert fast_path_reason(traces, "warmswap", CM,
+                            FleetConfig(n_workers=1, disruption=empty)) == \
+        fast_path_reason(traces, "warmswap", CM, FleetConfig(n_workers=1))
+
+
+def test_disruption_runs_are_deterministic():
+    traces = generate_fleet_traces(n_functions=6, horizon_min=240.0, seed=4,
+                                   total_rate_per_min=5.0)
+    sch = DISRUPTIONS.build("churn", n_workers=2, horizon_min=240.0, seed=1,
+                            mean_uptime_min=40.0, downtime_min=5.0)
+    fc = lambda: FleetConfig(n_workers=2, disruption=sch)
+    a = _simulate_fleet_impl(traces, "warmswap", CM, fc())
+    b = _simulate_fleet_impl(traces, "warmswap", CM, fc())
+    assert np.array_equal(a.latency_samples_s, b.latency_samples_s)
+    assert a.total_latency_s == b.total_latency_s
+    assert a.requeued == b.requeued
+
+
+# ---------------------------------------------------------------------------------
+# Scenario wiring
+# ---------------------------------------------------------------------------------
+
+def test_scenario_disruption_reaches_the_engine():
+    scn = Scenario(engine="fleet", methods=["warmswap"], n_workers=2,
+                   traces={"name": "fleet",
+                           "kwargs": {"n_functions": 6, "horizon_min": 240.0,
+                                      "seed": 2, "total_rate_per_min": 5.0}},
+                   disruption={"name": "storm", "kwargs": {"count": 2}})
+    res = run(scn)
+    assert res.raw["warmswap"].cache_flushes == 2
+
+
+def test_single_engine_rejects_disruption():
+    with pytest.raises(ValueError, match="engine='single'"):
+        Scenario(engine="single", disruption={"name": "storm"})
+
+
+def test_checked_in_churn_spec_actually_churns():
+    """The shipped churn spec is not a no-op at smoke scale: its schedule
+    fires and requests get displaced."""
+    scn = Scenario.from_file("benchmarks/scenarios/churn.json")
+    res = run(scn, smoke=True)
+    for m, r in res.raw.items():
+        assert r.worker_failures >= 1, m
+        assert r.worker_failures == r.worker_recoveries, m
+        assert r.n_cold + r.n_warm == r.n_invocations + r.requeued, m
+
+
+# ---------------------------------------------------------------------------------
+# Live ReplicaSet replay (runtime/fault_tolerance.py)
+# ---------------------------------------------------------------------------------
+
+def test_replay_disruption_against_replica_set():
+    """The same schedule artifact the simulator replays drives a live
+    ReplicaSet: worker i maps to replica-i, fails kill, recovers re-warm
+    (and are the only events returned), flushes are a no-op."""
+    built = []
+
+    def make_engine(manager, image_id, cfg, method):
+        built.append(method)
+        return object()
+
+    rs = ReplicaSet(None, "img", None, make_engine, n_replicas=2)
+    assert built == ["warmswap", "warmswap"]
+    sch = DisruptionSchedule(
+        [DisruptionEvent(1.0, "worker_fail", 0),
+         DisruptionEvent(2.0, "cache_flush"),
+         DisruptionEvent(3.0, "worker_recover", 0)], n_workers=2)
+    events = replay_disruption(rs, sch, method="warmswap")
+    assert [e.replica for e in events] == ["replica-0"]
+    assert events[0].method == "warmswap" and events[0].seconds >= 0.0
+    assert set(rs.replicas) == {"replica-0", "replica-1"}
+    assert built == ["warmswap"] * 3                   # flush built nothing

@@ -59,6 +59,7 @@ SANCTIONED_TIMERS: Set[str] = {
 #: the spec checker doesn't demand them from the JSON.
 SPEC_INJECTED_KWARGS = {
     "page_cost": {"cost"},
+    "disruption": {"n_workers", "horizon_min"},
 }
 
 

@@ -47,6 +47,7 @@ _REGISTRY_SOURCES = {
     "page_cost": ("repro.core.costmodel", "PAGE_COST_MODELS"),
     "prewarm": ("repro.core.keepalive", "PREWARM_POLICIES"),
     "placement": ("repro.serving.scheduler", "PLACEMENTS"),
+    "disruption": ("repro.core.disruption", "DISRUPTIONS"),
 }
 
 

@@ -8,13 +8,19 @@ replay regresses:
   * dependency-loading speedup: inside the paper's 2.2-3.2x band;
   * azure_scale: >= 1M invocations simulated end-to-end in < 60 s;
   * azure_scale_xl: >= 10M invocations through the vectorized engine
-    (``engine='fleet_vec'``) in < 60 s.
+    (``engine='fleet_vec'``) in < 60 s;
+  * oracle dominance: the minimum oracle gap over every tournament cell
+    and audited scenario x method (``bench_policies``) must be finite and
+    >= 0 — a negative gap means an online policy beat the hindsight floor,
+    i.e. the floor (or an engine) is wrong (docs/SIMULATION.md, "Oracle
+    and disruption semantics").
 
 Runs locally too:
 
     python tools/ci/check_bench.py [results/BENCH_smoke.json]
 """
 import json
+import math
 import sys
 
 SAVING_BAND = (0.83, 0.93)       # 88 % +- 5 points
@@ -60,12 +66,25 @@ def main(path="results/BENCH_smoke.json"):
         f"azure_scale_xl took {wall_xl:.1f}s (budget {SCALE_XL_BUDGET_S}s) — " \
         f"vectorized engine (fleet_vec) hot path regressed"
 
+    gap = head["oracle_gap"]
+    for key in ("min_total_gap_s", "min_p99_gap_s"):
+        v = gap[key]
+        assert isinstance(v, (int, float)) and math.isfinite(v), \
+            f"oracle_gap.{key} is not a finite number: {v!r}"
+        assert v >= 0, \
+            f"oracle_gap.{key} = {v} < 0: an online policy undercut the " \
+            f"hindsight floor — the oracle-dominance invariant is broken"
+    assert gap.get("n_cells", 0) >= 1, \
+        f"oracle_gap audited no cells: {gap!r}"
+
     print(f"ok: saving {saving:.1%} (band {SAVING_BAND}), "
           f"dep speedup {speedup:.2f}x (band {SPEEDUP_BAND}), "
           f"azure_scale {n_inv:,} invocations in {wall:.1f}s "
           f"(< {SCALE_BUDGET_S:.0f}s), "
           f"azure_scale_xl {n_inv_xl:,} invocations in {wall_xl:.1f}s "
-          f"(< {SCALE_XL_BUDGET_S:.0f}s)")
+          f"(< {SCALE_XL_BUDGET_S:.0f}s), "
+          f"oracle dominance holds over {gap['n_cells']} cell(s) "
+          f"(min gap {gap['min_total_gap_s']:.3f}s)")
     return 0
 
 
