@@ -272,6 +272,35 @@ def run() -> Dict:
          f"{n_inv_xl} invocations x {len(res_xl.raw)} methods in "
          f"{xl_wall_s:.1f}s ({total_req_xl / max(xl_wall_s, 1e-9):,.0f} req/s)")
 
+    # ------------------------------------------------------ sanitizer overhead
+    # repro-san (docs/ANALYSIS.md, "Runtime sanitizer"): the same scenario,
+    # plain and under the invariant sanitizer. Results must be bit-identical
+    # (the sanitizer is assertions-only) and the wall-clock ratio is recorded
+    # into the headline so CI's check_bench.py can hold the 3x budget. Small
+    # wall floor damps timer noise at smoke scale.
+    from repro.core.scenario import Scenario
+    from repro.core.scenario import run as run_scenario
+
+    scn = Scenario.from_file(scenario_path("fleet_base"))
+    t0 = time.perf_counter()
+    plain = run_scenario(scn, smoke=smoke, sanitize=False)
+    plain_wall_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    checked = run_scenario(scn, smoke=smoke, sanitize=True)
+    sanitized_wall_s = time.perf_counter() - t0
+    assert plain.to_dict() == checked.to_dict(), \
+        "sanitized run diverged — the sanitizer must be assertions-only"
+    floor_s = 0.05
+    ratio = max(sanitized_wall_s, floor_s) / max(plain_wall_s, floor_s)
+    out["sanitize_overhead"] = {
+        "plain_wall_s": plain_wall_s,
+        "sanitized_wall_s": sanitized_wall_s,
+        "ratio": ratio,
+        "bit_identical": True,
+    }
+    emit("fleet/sanitize_overhead", sanitized_wall_s * 1e6,
+         f"plain={plain_wall_s:.2f}s ratio={ratio:.2f}x (budget 3x)")
+
     # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
     for r in sweep_file(scenario_path("placement"),

@@ -66,6 +66,10 @@ def _headline(outs: dict) -> dict:
             fleet["azure_scale_xl"]["n_invocations"]
         head["azure_scale_xl_wall_clock_s"] = \
             fleet["azure_scale_xl"]["wall_clock_s"]
+    if "sanitize_overhead" in fleet:
+        # repro-san cost headline (check_bench fails above 3x)
+        head["sanitize_overhead_ratio"] = \
+            fleet["sanitize_overhead"]["ratio"]
     sharing = outs.get("sharing") or {}
     if "paper_costs" in sharing:
         head["sharing_memory_saving_vs_prebaking"] = \

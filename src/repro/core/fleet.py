@@ -66,6 +66,7 @@ from repro.core.disruption import DisruptionSchedule
 from repro.core.events import EventKind, EventQueue
 from repro.core.keepalive import PREWARM_POLICIES, PrewarmPolicy
 from repro.core.pool import CapacityLedger, ClusterImageCache
+from repro.core.sanitize import FleetSanitizer, sanitize_enabled
 from repro.core.simulator import (CostModel, latency_percentiles,
                                   method_cold_latency_s)
 from repro.core.traces import Trace
@@ -321,10 +322,17 @@ def _simulate_fleet_impl(
     method: str,
     cost: CostModel,
     fleet: Optional[FleetConfig] = None,
+    sanitizer: Optional["FleetSanitizer"] = None,
 ) -> FleetResult:
     """The discrete-event engine body behind :func:`simulate_fleet` (same
-    contract); called by :func:`repro.core.scenario.run`."""
+    contract); called by :func:`repro.core.scenario.run`. ``sanitizer``
+    threads a :class:`repro.core.sanitize.FleetSanitizer` through the run
+    (built automatically under ``REPRO_SANITIZE=1``); its checks are
+    assertions only, so a sanitized run returns bit-identical results."""
     fleet = fleet if fleet is not None else FleetConfig()
+    san = sanitizer
+    if san is None and sanitize_enabled():
+        san = FleetSanitizer("fleet", method)
     if fleet.n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {fleet.n_workers}")
     if fleet.shared_cache_bytes is not None and fleet.page_cost is None:
@@ -610,6 +618,11 @@ def _simulate_fleet_impl(
         preallocated ``samples``/``waits`` buffers after the loop drains."""
         wait_s = (start - req_t) * 60.0
         busy_until = start + svc_s / 60.0
+        if san is not None:
+            san.check_service(start=start, req_t=req_t,
+                              prev_busy=inst.busy_until,
+                              busy_until=busy_until, worker=w.idx,
+                              fn=inst.fn)
         inst.busy_until = busy_until
         expires = busy_until + (fixed_ka if trivial_policy
                                 else policy.keep_alive_min(
@@ -851,6 +864,8 @@ def _simulate_fleet_impl(
             if (i >= n_req or head[0] < all_t_list[i]
                     or (head[0] == all_t_list[i] and head[1] <= _ARRIVAL)):
                 ev = pop()
+                if san is not None and san.check_event(ev[0], ev[1], ev[2]):
+                    san.check_books(workers, cluster)
                 handle_event(ev[0], ev[1], ev[3])
                 continue
         elif i >= n_req:
@@ -903,4 +918,8 @@ def _simulate_fleet_impl(
         "evictions": w.ledger.evictions,
         "instance_min": w.instance_min,
     } for w in workers]
+    if san is not None:
+        san.check_samples(samples, waits)
+        san.check_books(workers, cluster)
+        san.check_counters(res)
     return res

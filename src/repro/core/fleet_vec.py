@@ -65,6 +65,7 @@ from repro.core.fleet import (FleetConfig, FleetResult, _make_policy,
                               _Worker)
 from repro.core.keepalive import PrewarmPolicy
 from repro.core.pool import ClusterImageCache
+from repro.core.sanitize import FleetSanitizer, sanitize_enabled
 from repro.core.simulator import CostModel, method_cold_latency_s
 from repro.core.traces import Trace
 
@@ -451,7 +452,12 @@ def _solve_group(t_g: np.ndarray, g_idx: np.ndarray, cap: Optional[int],
 # -------------------------------------------------------------------- engine
 def _simulate_fleet_vec_impl(traces: List[Trace], method: str,
                              cost: CostModel, fleet: FleetConfig,
-                             use_scan: bool) -> FleetResult:
+                             use_scan: bool,
+                             sanitizer: Optional["FleetSanitizer"] = None
+                             ) -> FleetResult:
+    san = sanitizer
+    if san is None and sanitize_enabled():
+        san = FleetSanitizer("fleet_vec", method)
     workers, fn_image, images, cluster = _build_setup(traces, method, cost,
                                                       fleet)
     page = fleet.page_cost
@@ -570,7 +576,7 @@ def _simulate_fleet_vec_impl(traces: List[Trace], method: str,
         cidx = np.array([r[5] for r in recs], np.int64)
         o = np.argsort(cidx, kind="stable")
         created_t = np.array([r[4] for r in recs])[o]
-        expires = np.sort(np.array([r[0] for r in recs]))
+        expires = np.sort(np.array([r[0] for r in recs]), kind="stable")
         alive = np.arange(1, m + 1) - np.searchsorted(expires, created_t,
                                                       side="left")
         mc = int(alive.max())
@@ -607,20 +613,30 @@ def _simulate_fleet_vec_impl(traces: List[Trace], method: str,
         "evictions": w.ledger.evictions,
         "instance_min": w.instance_min,
     } for w in workers]
+    if san is not None:
+        san.check_samples(samples, waits)
+        san.check_books(workers, cluster)
+        san.check_counters(res)
     return res
 
 
 def simulate_fleet_vec(traces: List[Trace], method: str, cost: CostModel,
                        fleet: Optional[FleetConfig] = None,
-                       scan: Optional[bool] = None) -> FleetResult:
+                       scan: Optional[bool] = None,
+                       sanitizer: Optional["FleetSanitizer"] = None
+                       ) -> FleetResult:
     """Drop-in replacement for :func:`repro.core.fleet.simulate_fleet` with
     identical results (bit-for-bit). Configs outside the vectorizable domain
     (see :func:`fast_path_reason`) run the event engine verbatim. ``scan``
     forces the ``jax.lax.scan`` path on/off (default: the
-    ``REPRO_FLEET_VEC_SCAN=1`` env knob; cap=1 groups only)."""
+    ``REPRO_FLEET_VEC_SCAN=1`` env knob; cap=1 groups only). ``sanitizer``
+    threads a :class:`repro.core.sanitize.FleetSanitizer` through whichever
+    engine runs (built automatically under ``REPRO_SANITIZE=1``)."""
     fleet = fleet if fleet is not None else FleetConfig()
     SCAN_STATS["groups"] = 0      # repro-lint: allow[module-mutable]
     if fast_path_reason(traces, method, cost, fleet) is not None:
-        return _simulate_fleet_impl(traces, method, cost, fleet)
+        return _simulate_fleet_impl(traces, method, cost, fleet,
+                                    sanitizer=sanitizer)
     use_scan = _scan_enabled() if scan is None else scan
-    return _simulate_fleet_vec_impl(traces, method, cost, fleet, use_scan)
+    return _simulate_fleet_vec_impl(traces, method, cost, fleet, use_scan,
+                                    sanitizer=sanitizer)

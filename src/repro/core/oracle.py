@@ -258,7 +258,7 @@ def keepalive_frontier(traces: Sequence[Trace], method: str, cost: CostModel,
     idle = idle_bytes_for(method, cost)
     gaps = [np.diff(np.asarray(t.arrivals_min, np.float64))
             for t in traces if len(t.arrivals_min) > 1]
-    gaps_min = (np.sort(np.concatenate(gaps)) if gaps
+    gaps_min = (np.sort(np.concatenate(gaps), kind="stable") if gaps
                 else np.empty((0,)))
     n_req = sum(len(t.arrivals_min) for t in traces)
     n_fns = sum(1 for t in traces if len(t.arrivals_min))

@@ -68,6 +68,10 @@ class CapacityLedger:
         self.capacity_bytes = capacity_bytes
         self.entries: Dict[str, LedgerEntry] = {}
         self.evictions = 0
+        # incremental byte total, updated at every admit/evict/resize: the
+        # eviction loop reads it per iteration, and the sanitizer's
+        # books-balance check recomputes the sum to audit it
+        self._used_bytes = 0
 
     def holds(self, key: str) -> bool:
         """True if ``key`` is resident."""
@@ -75,7 +79,7 @@ class CapacityLedger:
 
     def used_bytes(self) -> int:
         """Total bytes of resident entries."""
-        return sum(e.nbytes for e in self.entries.values())
+        return self._used_bytes
 
     def touch(self, key: str, now: float) -> None:
         """Refresh ``key``'s LRU timestamp (``now``: any monotone clock —
@@ -106,10 +110,11 @@ class CapacityLedger:
         evicted = []
         if self.capacity_bytes is None:
             return evicted
-        while self.used_bytes() + headroom > self.capacity_bytes:
+        while self._used_bytes + headroom > self.capacity_bytes:
             victim = self._pick_victim(exclude)
             if victim is None:
                 break
+            self._used_bytes -= self.entries[victim].nbytes
             del self.entries[victim]
             self.evictions += 1
             evicted.append(victim)
@@ -127,6 +132,7 @@ class CapacityLedger:
         if key in self.entries:
             entry = self.entries[key]
             grew = nbytes > entry.nbytes
+            self._used_bytes += nbytes - entry.nbytes
             entry.nbytes = nbytes
             entry.pinned = pinned          # refresh pin state, not just size
             self.touch(key, now)
@@ -134,13 +140,17 @@ class CapacityLedger:
         evicted = self._reclaim(nbytes)
         self.entries[key] = LedgerEntry(nbytes=nbytes, last_used=now,
                                         pinned=pinned)
+        self._used_bytes += nbytes
         return evicted
 
     def evict(self, key: str) -> None:
-        self.entries.pop(key, None)
+        entry = self.entries.pop(key, None)
+        if entry is not None:
+            self._used_bytes -= entry.nbytes
 
     def resize(self, key: str, nbytes: int) -> None:
         if key in self.entries:
+            self._used_bytes += nbytes - self.entries[key].nbytes
             self.entries[key].nbytes = nbytes
 
 

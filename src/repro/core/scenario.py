@@ -354,6 +354,12 @@ class MethodResult:
     pages_transferred: int = 0
     shared_cache_peak_bytes: int = 0
     shared_cache_evictions: int = 0
+    placement_warm_hits: int = 0
+    placement_pool_hits: int = 0
+    requeued: int = 0
+    worker_failures: int = 0
+    worker_recoveries: int = 0
+    cache_flushes: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -492,11 +498,18 @@ def _method_result(r, traces: List[Trace]) -> MethodResult:
                                  if is_fleet else 0),
         shared_cache_evictions=(r.shared_cache_evictions
                                 if is_fleet else 0),
+        placement_warm_hits=r.placement_warm_hits if is_fleet else 0,
+        placement_pool_hits=r.placement_pool_hits if is_fleet else 0,
+        requeued=r.requeued if is_fleet else 0,
+        worker_failures=r.worker_failures if is_fleet else 0,
+        worker_recoveries=r.worker_recoveries if is_fleet else 0,
+        cache_flushes=r.cache_flushes if is_fleet else 0,
     )
 
 
 def run(scenario: Scenario, *, smoke: bool = False,
-        overrides: Optional[RunOverrides] = None) -> Result:
+        overrides: Optional[RunOverrides] = None,
+        sanitize: Optional[bool] = None) -> Result:
     """Run one scenario end to end: resolve components from the registries,
     simulate every method, return the unified :class:`Result`.
 
@@ -510,6 +523,11 @@ def run(scenario: Scenario, *, smoke: bool = False,
         smoke: apply the spec's ``smoke_overrides`` first (CI scale).
         overrides: already-resolved components to use instead of building
             from the spec (see :class:`RunOverrides`).
+        sanitize: run under the repro-san invariant sanitizer
+            (``repro.core.sanitize``): instrumented assertions at every
+            drain step, a :class:`~repro.core.sanitize.SanitizeError` with
+            a repro artifact on violation, bit-identical results otherwise.
+            ``None`` (default) follows the ``REPRO_SANITIZE`` env knob.
 
     Returns:
         A :class:`Result`; ``result.raw[method]`` holds the engine-native
@@ -518,10 +536,13 @@ def run(scenario: Scenario, *, smoke: bool = False,
     # deferred: fleet imports this module's wrappers' home modules —
     # importing it at module load would be circular
     from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+    from repro.core.sanitize import FleetSanitizer, sanitize_enabled
     from repro.core.simulator import _simulate_impl
 
     scn = scenario.smoke_scaled() if smoke else scenario
     ov = overrides if overrides is not None else RunOverrides()
+    san_on = sanitize_enabled() if sanitize is None else bool(sanitize)
+    scn_dict = scn.to_dict() if san_on else None
 
     traces = (ov.traces if ov.traces is not None
               else TRACE_GENERATORS.build(scn.traces.name, **scn.traces.kwargs))
@@ -542,6 +563,9 @@ def run(scenario: Scenario, *, smoke: bool = False,
         for m in scn.methods:
             raw[m] = _simulate_impl(traces, m, cost, keep_alive,
                                     scn.shared_images, page)
+            if san_on:
+                FleetSanitizer("single", m,
+                               scenario=scn_dict).check_single(raw[m])
     else:
         # deferred: repro.serving pulls in the model/engine stack
         from repro.serving.scheduler import PLACEMENTS
@@ -580,7 +604,12 @@ def run(scenario: Scenario, *, smoke: bool = False,
         else:
             impl = _simulate_fleet_impl
         for m in scn.methods:
-            raw[m] = impl(traces, m, cost, fleet_cfg)
+            if san_on:
+                raw[m] = impl(traces, m, cost, fleet_cfg,
+                              sanitizer=FleetSanitizer(scn.engine, m,
+                                                       scenario=scn_dict))
+            else:
+                raw[m] = impl(traces, m, cost, fleet_cfg)
 
     summary: Dict[str, float] = {}
     if "warmswap" in raw and "prebaking" in raw:

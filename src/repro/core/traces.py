@@ -55,7 +55,7 @@ def poisson_arrivals(rate_per_min: float, horizon_min: float,
         return np.empty((0,), np.float64)
     n_expected = rate_per_min * horizon_min
     n = rng.poisson(n_expected)
-    return np.sort(rng.uniform(0.0, horizon_min, size=n))
+    return np.sort(rng.uniform(0.0, horizon_min, size=n), kind="stable")
 
 
 def poisson_arrivals_batched(rates: Sequence[float], horizon_min: float,
@@ -85,7 +85,7 @@ def poisson_arrivals_batched(rates: Sequence[float], horizon_min: float,
     counts[rates <= 0] = 0
     flat = rng.uniform(0.0, horizon_min, size=int(counts.sum()))
     segs = np.split(flat, np.cumsum(counts)[:-1])
-    return [np.sort(seg) for seg in segs] if sorted else segs
+    return [np.sort(seg, kind="stable") for seg in segs] if sorted else segs
 
 
 @TRACE_GENERATORS.register("azure")
@@ -222,7 +222,7 @@ def load_azure_csv(path: str, n_functions: int, horizon_min: float,
             for minute, c in enumerate(counts):
                 if c:
                     arrivals.extend(minute + rng.uniform(0, 1, size=c))
-            arr = np.sort(np.array(arrivals))
+            arr = np.sort(np.array(arrivals), kind="stable")
             rate = float(counts.sum() / max(len(counts), 1))
             traces.append(Trace(fi, rate, arr))
     return traces

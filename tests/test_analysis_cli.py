@@ -118,3 +118,69 @@ def test_diff_baseline_count_limited():
     new, old = diff_baseline([f, g], {f.fingerprint: 1})
     assert [x.line for x in old] == [1]
     assert [x.line for x in new] == [2]
+
+
+# ------------------------------------------------------------- stale pragmas
+
+def test_stale_pragma_is_a_finding(tmp_path, capsys):
+    p = tmp_path / "mod.py"
+    p.write_text("x = 1  # repro-lint: allow[unguarded-access]\n")
+    assert main([str(p), "--no-baseline"]) == 1
+    assert "pragma/stale-pragma" in capsys.readouterr().out
+
+
+def test_used_pragma_is_not_stale(tmp_path):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION.replace(
+        "return self.items.get(key)",
+        "return self.items.get(key)  "
+        "# repro-lint: allow[unguarded-access]"))
+    assert main([str(p), "--no-baseline"]) == 0
+
+
+def test_stale_file_pragma_is_a_finding(tmp_path, capsys):
+    p = tmp_path / "mod.py"
+    p.write_text("# repro-lint: allow-file[unguarded-access]\nx = 1\n")
+    assert main([str(p), "--no-baseline"]) == 1
+    assert "pragma/stale-pragma" in capsys.readouterr().out
+
+
+def test_pragma_inside_string_literal_is_ignored(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text('s = "# repro-lint: allow[unguarded-access]"\n')
+    assert main([str(p), "--no-baseline"]) == 0
+
+
+def test_subset_run_skips_stale_pragma_detection(tmp_path):
+    # "unused" is meaningless unless every AST checker ran over the file
+    p = tmp_path / "mod.py"
+    p.write_text("x = 1  # repro-lint: allow[unguarded-access]\n")
+    assert main([str(p), "--no-baseline",
+                 "--checkers", "lock-discipline"]) == 0
+
+
+# ----------------------------------------------------- stale baseline entries
+
+def test_stale_baseline_entry_is_a_finding(tmp_path, capsys):
+    p = tmp_path / "pool.py"
+    p.write_text(VIOLATION)
+    bl = tmp_path / "baseline.json"
+    assert main([str(p), "--baseline", str(bl), "--write-baseline"]) == 0
+
+    # the grandfathered violation gets fixed: its entry is now stale
+    p.write_text("x = 1\n")
+    capsys.readouterr()
+    assert main([str(p), "--baseline", str(bl)]) == 1
+    assert "baseline/stale-entry" in capsys.readouterr().out
+
+
+def test_stale_baseline_skipped_when_path_not_scanned(tmp_path):
+    a = tmp_path / "pool.py"
+    a.write_text(VIOLATION)
+    bl = tmp_path / "baseline.json"
+    assert main([str(a), "--baseline", str(bl), "--write-baseline"]) == 0
+
+    # scanning an unrelated file says nothing about pool.py's entry
+    b = tmp_path / "other.py"
+    b.write_text("x = 1\n")
+    assert main([str(b), "--baseline", str(bl)]) == 0

@@ -1,0 +1,130 @@
+"""contract checker: docs/SIMULATION.md + docs/API.md cross-validated against
+the code. The shipped tree must be clean, and every mutation (rank flip,
+dropped doc entry, phantom field) must be caught — proven by pointing the
+monkeypatchable ``*_PATH`` constants at deliberately-broken copies."""
+import textwrap
+
+from tools.analysis import contract
+from tools.analysis.__main__ import main
+
+EVENTS_FIXTURE = textwrap.dedent("""
+    class EventKind(IntEnum):
+        INSTANCE_FREE = 0
+        PREWARM_SPAWN = 1
+        ARRIVAL = 2
+        KEEPALIVE_EXPIRY = 3
+        WORKER_FAIL = 4
+        WORKER_RECOVER = 5
+        CACHE_FLUSH = 6
+""")
+
+
+def rules(findings):
+    return sorted(f"{f.checker}/{f.rule}" for f in findings)
+
+
+def test_shipped_tree_is_clean():
+    assert contract.check_repo() == []
+
+
+def test_rank_flip_is_caught(tmp_path, monkeypatch):
+    mutated = EVENTS_FIXTURE.replace("KEEPALIVE_EXPIRY = 3",
+                                     "KEEPALIVE_EXPIRY = 9")
+    p = tmp_path / "events.py"
+    p.write_text(mutated)
+    monkeypatch.setattr(contract, "EVENTS_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "rank-mismatch"
+               and "KEEPALIVE_EXPIRY" in f.message for f in fs)
+
+
+def test_rank_flip_fails_the_cli(tmp_path, monkeypatch, capsys):
+    mutated = EVENTS_FIXTURE.replace("INSTANCE_FREE = 0",
+                                     "INSTANCE_FREE = 8")
+    p = tmp_path / "events.py"
+    p.write_text(mutated)
+    monkeypatch.setattr(contract, "EVENTS_PATH", str(p))
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean), "--no-baseline"]) == 1
+    assert "contract/rank-mismatch" in capsys.readouterr().out
+
+
+def test_new_enum_member_must_be_documented(tmp_path, monkeypatch):
+    mutated = EVENTS_FIXTURE + "    NETWORK_PARTITION = 7\n"
+    p = tmp_path / "events.py"
+    p.write_text(mutated)
+    monkeypatch.setattr(contract, "EVENTS_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "undocumented-kind"
+               and "NETWORK_PARTITION" in f.message for f in fs)
+
+
+def test_doc_only_kind_is_caught(tmp_path, monkeypatch):
+    doc = textwrap.dedent("""
+        ## Event heap tie-break order (`core/events.py`)
+
+          1. `INSTANCE_FREE` (0)
+          2. `PREWARM_SPAWN` (1)
+          3. *arrivals* (2)
+          4. `KEEPALIVE_EXPIRY` (3)
+          5. `WORKER_FAIL` (4), `WORKER_RECOVER` (5), `CACHE_FLUSH` (6)
+          6. `PHANTOM_KIND` (7)
+
+        ## Next section
+    """)
+    p = tmp_path / "SIMULATION.md"
+    p.write_text(doc)
+    monkeypatch.setattr(contract, "DOC_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "unknown-event-kind"
+               and "PHANTOM_KIND" in f.message for f in fs)
+
+
+def test_missing_tiebreak_table_is_caught(tmp_path, monkeypatch):
+    p = tmp_path / "SIMULATION.md"
+    p.write_text("# nothing here\n")
+    monkeypatch.setattr(contract, "DOC_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "unknown-event-kind"
+               and "tie-break" in f.message for f in fs)
+
+
+def test_unknown_disruption_kind_is_caught(tmp_path, monkeypatch):
+    p = tmp_path / "disruption.py"
+    p.write_text('EVENT_KINDS = ("worker_fail", "meteor_strike")\n')
+    monkeypatch.setattr(contract, "DISRUPTION_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "disruption-kind"
+               and "meteor_strike" in f.message for f in fs)
+
+
+def test_undocumented_result_field_is_caught(tmp_path, monkeypatch):
+    with open(contract.API_PATH) as f:
+        api = f.read()
+    assert "`requeued`" in api
+    p = tmp_path / "API.md"
+    p.write_text(api.replace("`requeued`", "requeued"))
+    monkeypatch.setattr(contract, "API_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "undocumented-field"
+               and "requeued" in f.message for f in fs)
+
+
+def test_phantom_doc_field_is_caught(tmp_path, monkeypatch):
+    with open(contract.API_PATH) as f:
+        api = f.read()
+    p = tmp_path / "API.md"
+    p.write_text(api.replace("`n_cold`", "`n_cold`, `bogus_field`"))
+    monkeypatch.setattr(contract, "API_PATH", str(p))
+    fs = contract.check_repo()
+    assert any(f.rule == "unknown-field"
+               and "bogus_field" in f.message for f in fs)
+
+
+def test_missing_methods_row_is_caught(tmp_path, monkeypatch):
+    p = tmp_path / "API.md"
+    p.write_text("# no table\n")
+    monkeypatch.setattr(contract, "API_PATH", str(p))
+    fs = contract.check_repo()
+    assert rules(fs) == ["contract/unknown-field"]

@@ -1,0 +1,92 @@
+"""counter-flow checker: every fleet counter has a law, a writer, and a
+projection. The shipped tree must be clean; seeded mutations (a dropped
+increment, an undeclared field, a severed projection) must each be caught."""
+from tools.analysis import config, counter_flow
+from tools.analysis.__main__ import main
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def test_shipped_tree_is_clean():
+    assert counter_flow.check_repo() == []
+
+
+def test_dropped_increment_is_caught(tmp_path, monkeypatch):
+    with open(counter_flow.FLEET_PATH) as f:
+        src = f.read()
+    assert "res.worker_failures += 1" in src
+    p = tmp_path / "fleet.py"
+    p.write_text(src.replace("res.worker_failures += 1", "pass"))
+    monkeypatch.setattr(counter_flow, "FLEET_PATH", str(p))
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "unmutated-counter"
+               and "worker_failures" in f.message for f in fs)
+
+
+def test_dropped_increment_fails_the_cli(tmp_path, monkeypatch, capsys):
+    with open(counter_flow.FLEET_PATH) as f:
+        src = f.read()
+    p = tmp_path / "fleet.py"
+    p.write_text(src.replace("res.requeued += len(pending)", "pass"))
+    monkeypatch.setattr(counter_flow, "FLEET_PATH", str(p))
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean), "--no-baseline"]) == 1
+    assert "counter-flow/unmutated-counter" in capsys.readouterr().out
+
+
+def test_undeclared_field_is_caught(monkeypatch):
+    pruned = {k: v for k, v in config.FLEET_COUNTERS.items()
+              if k != "requeued"}
+    monkeypatch.setattr(config, "FLEET_COUNTERS", pruned)
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "undeclared-counter"
+               and "requeued" in f.message for f in fs)
+
+
+def test_stale_declaration_is_caught(monkeypatch):
+    augmented = dict(config.FLEET_COUNTERS)
+    augmented["phantom_counter"] = ("service-conservation",
+                                    "phantom_counter")
+    monkeypatch.setattr(config, "FLEET_COUNTERS", augmented)
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "unknown-counter"
+               and "phantom_counter" in f.message for f in fs)
+
+
+def test_unknown_law_is_caught(monkeypatch):
+    augmented = dict(config.FLEET_COUNTERS)
+    augmented["n_cold"] = ("law-of-the-jungle", "n_cold")
+    monkeypatch.setattr(config, "FLEET_COUNTERS", augmented)
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "unknown-law"
+               and "law-of-the-jungle" in f.message for f in fs)
+
+
+def test_severed_projection_is_caught(tmp_path, monkeypatch):
+    with open(counter_flow.SCENARIO_PATH) as f:
+        src = f.read()
+    needle = "requeued=r.requeued if is_fleet else 0,"
+    assert needle in src
+    p = tmp_path / "scenario.py"
+    p.write_text(src.replace(needle, ""))
+    monkeypatch.setattr(counter_flow, "SCENARIO_PATH", str(p))
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "unprojected-counter"
+               and "'requeued'" in f.message for f in fs)
+
+
+def test_missing_projection_function_is_caught(tmp_path, monkeypatch):
+    p = tmp_path / "scenario.py"
+    p.write_text("class MethodResult:\n    method: str\n")
+    monkeypatch.setattr(counter_flow, "SCENARIO_PATH", str(p))
+    fs = counter_flow.check_repo()
+    assert any(f.rule == "unprojected-counter"
+               and "_method_result" in f.message for f in fs)
+
+
+def test_every_declared_law_exists():
+    for name, (law, _target) in config.FLEET_COUNTERS.items():
+        assert law in config.COUNTER_LAWS, (name, law)

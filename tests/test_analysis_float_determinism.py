@@ -1,0 +1,125 @@
+"""float-determinism checker: order-sensitive reductions that can break the
+bit-identity contract between the fleet engines (docs/ANALYSIS.md)."""
+import textwrap
+
+from tools.analysis import float_determinism
+from tools.analysis.base import SourceFile
+
+
+def _check(tmp_path, code, rel="src/repro/core/_fixture.py"):
+    p = tmp_path / "fixture.py"
+    p.write_text(textwrap.dedent(code))
+    src = SourceFile.parse(str(p))
+    src.rel = rel
+    return float_determinism.check(src)
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+def test_np_sort_without_kind_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as np
+        out = np.sort(values)
+    """)
+    assert rules(fs) == ["unstable-sort"]
+
+
+def test_np_argsort_without_kind_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as np
+        order = np.argsort(keys)
+    """)
+    assert rules(fs) == ["unstable-sort"]
+
+
+def test_stable_kind_is_clean(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as np
+        a = np.sort(values, kind="stable")
+        b = np.argsort(keys, kind="mergesort")
+    """)
+    assert fs == []
+
+
+def test_numpy_alias_is_tracked(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as xp
+        out = xp.sort(values)
+    """)
+    assert rules(fs) == ["unstable-sort"]
+
+
+def test_non_numpy_sort_is_ignored(tmp_path):
+    fs = _check(tmp_path, """
+        import mylib
+        out = mylib.sort(values)
+    """)
+    assert fs == []
+
+
+def test_sum_over_set_literal_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        total = sum({1.0, 2.0, 3.0})
+    """)
+    assert rules(fs) == ["set-reduction"]
+
+
+def test_sum_over_generator_from_set_var_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        def f(items):
+            pending = set(items)
+            return sum(x * 2.0 for x in pending)
+    """)
+    assert rules(fs) == ["set-reduction"]
+
+
+def test_fsum_over_set_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        import math
+        total = math.fsum({0.1, 0.2})
+    """)
+    assert rules(fs) == ["set-reduction"]
+
+
+def test_sum_over_list_is_clean(tmp_path):
+    fs = _check(tmp_path, """
+        def f(items):
+            vals = [x.cost for x in items]
+            return sum(vals) + sum(x * 2.0 for x in vals)
+    """)
+    assert fs == []
+
+
+def test_keyed_extremum_over_set_is_flagged(tmp_path):
+    fs = _check(tmp_path, """
+        def pick(candidates):
+            live = set(candidates)
+            return min(live, key=lambda w: w.load)
+    """)
+    assert rules(fs) == ["keyed-extremum-over-set"]
+
+
+def test_keyed_extremum_over_list_is_clean(tmp_path):
+    fs = _check(tmp_path, """
+        def pick(candidates):
+            return min(candidates, key=lambda w: w.load)
+    """)
+    assert fs == []
+
+
+def test_out_of_scope_file_is_skipped(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as np
+        out = np.sort(values)
+    """, rel="examples/demo.py")
+    assert fs == []
+
+
+def test_pragma_suppresses(tmp_path):
+    fs = _check(tmp_path, """
+        import numpy as np
+        out = np.sort(values)  # repro-lint: allow[unstable-sort]
+    """)
+    assert fs == []

@@ -23,6 +23,7 @@ def bench_artifact(**overrides):
         "azure_scale_xl_wall_clock_s": 40.0,
         "oracle_gap": {"min_total_gap_s": 1.5, "min_p99_gap_s": 0.01,
                        "n_cells": 67},
+        "sanitize_overhead_ratio": 1.6,
     }
     head.update(overrides)
     return {"bench_schema_version": 1,
@@ -51,6 +52,8 @@ def test_check_bench_passes_in_band(tmp_path):
                      "n_cells": 5}}, "finite"),
     ({"oracle_gap": {"min_total_gap_s": 0.0, "min_p99_gap_s": 0.0,
                      "n_cells": 0}}, "no cells"),
+    ({"sanitize_overhead_ratio": 4.5}, "sanitize"),
+    ({"sanitize_overhead_ratio": math.nan}, "finite"),
 ])
 def test_check_bench_fails_out_of_band(tmp_path, overrides, fragment):
     path = write(tmp_path, bench_artifact(**overrides))

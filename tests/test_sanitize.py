@@ -1,0 +1,239 @@
+"""repro-san runtime sanitizer: bit-identity under REPRO_SANITIZE, every
+invariant check fires on a seeded corruption, and violations emit a replayable
+repro artifact (docs/ANALYSIS.md, "Runtime sanitizer")."""
+import json
+import os
+
+import pytest
+
+from repro.core import sanitize as sanitize_mod
+from repro.core.fleet import FleetResult
+from repro.core.pool import CapacityLedger, ClusterImageCache
+from repro.core.sanitize import (FleetSanitizer, SanitizeError,
+                                 sanitize_enabled)
+from repro.core.scenario import Scenario, run
+
+SCENARIOS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "scenarios")
+
+
+def _scn(name):
+    return Scenario.from_file(os.path.join(SCENARIOS, f"{name}.json"))
+
+
+class _Worker:
+    def __init__(self, idx=0, capacity=None):
+        self.idx = idx
+        self.ledger = CapacityLedger(capacity)
+
+
+# ----------------------------------------------------------------- env knob
+
+def test_sanitize_enabled_reads_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+
+
+# ------------------------------------------------------------- bit-identity
+
+@pytest.mark.parametrize("name", ["fleet_base", "churn", "sharing_fig7",
+                                  "azure_scale_xl"])
+def test_sanitized_run_is_bit_identical(name):
+    scn = _scn(name)
+    plain = run(scn, smoke=True, sanitize=False)
+    checked = run(scn, smoke=True, sanitize=True)
+    assert plain.to_dict() == checked.to_dict()
+
+
+def test_env_knob_reaches_the_engines(monkeypatch):
+    scn = _scn("fleet_base")
+    plain = run(scn, smoke=True, sanitize=False)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    checked = run(scn, smoke=True)
+    assert plain.to_dict() == checked.to_dict()
+
+
+# ------------------------------------------------------------ event checks
+
+def test_event_order_regression_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    san.check_event(1.0, 3, 5)
+    with pytest.raises(SanitizeError, match="event-order"):
+        san.check_event(1.0, 2, 6)
+
+
+def test_event_order_same_tuple_never_repeats(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    san.check_event(1.0, 0, 1)
+    with pytest.raises(SanitizeError, match="event-order"):
+        san.check_event(1.0, 0, 1)
+
+
+def test_nonfinite_event_time_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="event-order"):
+        san.check_event(float("nan"), 0, 0)
+
+
+def test_periodic_books_cadence(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    due = [san.check_event(float(i), 0, i)
+           for i in range(2 * FleetSanitizer.BOOKS_EVERY)]
+    assert sum(due) == 2
+
+
+def test_negative_wait_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="negative-wait"):
+        san.check_service(start=1.0, req_t=2.0, prev_busy=0.0,
+                          busy_until=1.5, worker=0, fn=3)
+
+
+def test_busy_regression_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="busy-regression"):
+        san.check_service(start=1.0, req_t=0.5, prev_busy=2.0,
+                          busy_until=3.0, worker=0, fn=3)
+
+
+# ------------------------------------------------------------------- books
+
+def test_balanced_books_pass(tmp_path):
+    w = _Worker()
+    w.ledger.admit("img:a", 100, now=0.0)
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    san.check_books([w])
+
+
+def test_ledger_imbalance_raises(tmp_path):
+    w = _Worker()
+    w.ledger.admit("img:a", 100, now=0.0)
+    w.ledger._used_bytes += 7
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="ledger-books"):
+        san.check_books([w])
+
+
+def test_cluster_holder_without_pool_entry_raises(tmp_path):
+    w = _Worker()
+    cluster = ClusterImageCache()
+    cluster.admit("img:a", 100, w.idx, now=0.0)
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="cluster-books"):
+        san.check_books([w], cluster)
+
+    w.ledger.admit("img:a", 100, now=0.0)
+    san.check_books([w], cluster)       # consistent again
+
+
+# ---------------------------------------------------------------- counters
+
+def _result(**kw):
+    base = dict(method="warmswap", n_invocations=10, n_cold=4, n_warm=6,
+                total_latency_s=1.0, memory_bytes=0, n_workers=1)
+    base.update(kw)
+    return FleetResult(**base)
+
+
+def test_conservation_holds(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    san.check_counters(_result())
+
+
+def test_dropped_service_start_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    with pytest.raises(SanitizeError, match="counter-conservation"):
+        san.check_counters(_result(n_warm=5))
+
+
+def test_requeue_widens_the_bound(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    res = _result(n_warm=7)
+    res.requeued = 1
+    res.worker_failures = 1
+    san.check_counters(res)             # 10 <= 11 <= 11
+    res.n_warm = 8                      # 12 > 11: one start too many
+    with pytest.raises(SanitizeError, match="counter-conservation"):
+        san.check_counters(res)
+
+
+def test_negative_counter_raises(tmp_path):
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    res = _result()
+    res.pool_misses = -1
+    with pytest.raises(SanitizeError, match="counter-conservation"):
+        san.check_counters(res)
+
+
+def test_sample_domain_violations_raise(tmp_path):
+    import numpy as np
+    san = FleetSanitizer("fleet", "warmswap", artifact_dir=str(tmp_path))
+    ok = np.array([1.0, 2.0])
+    san.check_samples(ok, np.array([0.0, 1.0]))
+    with pytest.raises(SanitizeError, match="sample-domain"):
+        san.check_samples(ok, np.array([0.0, -0.5]))
+    with pytest.raises(SanitizeError, match="sample-domain"):
+        san.check_samples(np.array([1.0, np.inf]), np.array([0.0, 0.0]))
+    with pytest.raises(SanitizeError, match="sample-domain"):
+        san.check_samples(np.array([0.5, 1.0]), np.array([0.6, 0.0]))
+
+
+# ---------------------------------------------------------- repro artifact
+
+def test_violation_writes_repro_artifact(tmp_path):
+    san = FleetSanitizer("fleet", "prebaking",
+                         scenario={"name": "fixture"},
+                         artifact_dir=str(tmp_path))
+    san.check_event(5.0, 1, 2)
+    with pytest.raises(SanitizeError) as ei:
+        san.check_event(4.0, 0, 3)
+    path = ei.value.artifact_path
+    assert path is not None and os.path.exists(path)
+    payload = json.loads(open(path).read())
+    assert payload["sanitizer_schema_version"] == 1
+    assert payload["invariant"] == "event-order"
+    assert payload["engine"] == "fleet"
+    assert payload["method"] == "prebaking"
+    assert payload["scenario"] == {"name": "fixture"}
+    assert payload["event"] == {"t": 4.0, "kind": 0, "seq": 3}
+    assert str(ei.value).startswith("[repro-san/event-order]")
+    assert path in str(ei.value)
+
+
+def test_artifact_name_is_content_addressed(tmp_path):
+    paths = []
+    for _ in range(2):
+        san = FleetSanitizer("fleet", "warmswap",
+                             artifact_dir=str(tmp_path))
+        san.check_event(2.0, 0, 0)
+        with pytest.raises(SanitizeError) as ei:
+            san.check_event(1.0, 0, 1)
+        paths.append(ei.value.artifact_path)
+    assert paths[0] == paths[1]         # same violation, same digest
+
+
+# ------------------------------------------- end-to-end seeded corruption
+
+def test_runtime_books_corruption_is_caught(tmp_path, monkeypatch):
+    """A books bug planted in the live ledger (admit drifts the incremental
+    byte total) is caught by a sanitized run, with a repro artifact."""
+    monkeypatch.setattr(sanitize_mod, "DEFAULT_ARTIFACT_DIR", str(tmp_path))
+    orig_admit = CapacityLedger.admit
+
+    def drifting_admit(self, key, nbytes, now, pinned=False):
+        out = orig_admit(self, key, nbytes, now, pinned)
+        self._used_bytes += 1
+        return out
+
+    monkeypatch.setattr(CapacityLedger, "admit", drifting_admit)
+    with pytest.raises(SanitizeError, match="ledger-books") as ei:
+        run(_scn("fleet_base"), smoke=True, sanitize=True)
+    path = ei.value.artifact_path
+    assert path is not None and os.path.exists(path)
+    payload = json.loads(open(path).read())
+    assert payload["invariant"] == "ledger-books"
+    assert payload["scenario"]["name"] == "fleet_base"

@@ -11,7 +11,8 @@
     --json FILE          write the machine-readable findings artifact
     --fix-suggestions    print a suggested fix under each finding
     --checkers a,b       run a subset (determinism, lock-discipline,
-                         shared-state, spec-registry)
+                         shared-state, float-determinism, spec-registry,
+                         contract, counter-flow, pragma)
 
 Exit status: 0 = no new findings, 1 = new findings, 2 = usage error.
 """
@@ -23,18 +24,33 @@ import os
 import sys
 from typing import Iterable, List, Optional, Sequence
 
-from tools.analysis import determinism, locks, shared_state, specs
-from tools.analysis.base import REPO_ROOT, SourceFile, collect_files
+from tools.analysis import (contract, counter_flow, determinism,
+                            float_determinism, locks, shared_state, specs)
+from tools.analysis.base import (REPO_ROOT, SourceFile, collect_files,
+                                 rel_path)
 from tools.analysis.findings import (Finding, diff_baseline, findings_json,
-                                     load_baseline, write_baseline)
+                                     load_baseline, load_baseline_entries,
+                                     stale_baseline_findings, write_baseline)
 
 #: name -> module for the AST (``.py``) checkers.
 PY_CHECKERS = {
     determinism.CHECKER: determinism,
     locks.CHECKER: locks,
     shared_state.CHECKER: shared_state,
+    float_determinism.CHECKER: float_determinism,
 }
-ALL_CHECKERS = tuple(PY_CHECKERS) + (specs.CHECKER,)
+#: name -> module for the repo-level contract checkers: they verify the
+#: docs-as-spec contracts of fixed in-tree targets, so they run once per
+#: invocation (when selected), independent of the CLI paths.
+REPO_CHECKERS = {
+    contract.CHECKER: contract,
+    counter_flow.CHECKER: counter_flow,
+}
+#: The stale-pragma pseudo-checker (emitted by ``run_analysis`` itself when
+#: every AST checker ran, so "unused" is actually meaningful).
+PRAGMA_CHECKER = "pragma"
+ALL_CHECKERS = (tuple(PY_CHECKERS) + (specs.CHECKER,)
+                + tuple(REPO_CHECKERS) + (PRAGMA_CHECKER,))
 
 DEFAULT_BASELINE = os.path.join(REPO_ROOT, "tools", "analysis",
                                 "baseline.json")
@@ -50,6 +66,9 @@ def run_analysis(paths: Iterable[str],
         raise ValueError(f"unknown checker(s) {unknown} "
                          f"(choose from {list(ALL_CHECKERS)})")
     py_files, json_files = collect_files(paths)
+    # stale-pragma detection needs every AST checker's suppression hits —
+    # after a subset run, "unused" would just mean "not checked"
+    all_ast_ran = set(PY_CHECKERS) <= set(selected)
     findings: List[Finding] = []
     for path in py_files:
         try:
@@ -63,9 +82,21 @@ def run_analysis(paths: Iterable[str],
             mod = PY_CHECKERS.get(name)
             if mod is not None:
                 findings.extend(mod.check(src))
+        if PRAGMA_CHECKER in selected and all_ast_ran:
+            for line, rule in src.stale_pragmas():
+                findings.append(Finding(
+                    PRAGMA_CHECKER, "stale-pragma", src.rel, line, 0,
+                    f"pragma allows '{rule}' but suppresses no finding — "
+                    f"dead suppressions are how grandfathered bugs hide",
+                    snippet=src.line(line).strip(),
+                    suggestion="delete the stale pragma (the violation it "
+                               "sanctioned is gone)"))
     if specs.CHECKER in selected:
         for path in json_files:
             findings.extend(specs.check_file(path))
+    for name, mod in REPO_CHECKERS.items():
+        if name in selected:
+            findings.extend(mod.check_repo())
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.checker, f.rule))
     return findings
 
@@ -107,6 +138,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     baseline = {} if args.no_baseline else load_baseline(args.baseline)
     new, old = diff_baseline(findings, baseline)
+
+    if not args.no_baseline:
+        # a grandfathered fingerprint nothing consumes is a dead suppression
+        py_files, json_files = collect_files(args.paths)
+        scanned = {rel_path(p) for p in py_files + json_files}
+        stale = stale_baseline_findings(load_baseline_entries(args.baseline),
+                                        findings, scanned)
+        findings.extend(stale)
+        new.extend(stale)
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.checker,
+                                     f.rule))
+        new.sort(key=lambda f: (f.path, f.line, f.col, f.checker, f.rule))
 
     for f in new:
         print(f.render(args.fix_suggestions))

@@ -13,8 +13,10 @@ Pragma grammar (full catalog in docs/ANALYSIS.md):
 from __future__ import annotations
 
 import ast
+import io
 import os
 import re
+import tokenize
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
@@ -34,9 +36,27 @@ def rel_path(path: str) -> str:
                            REPO_ROOT).replace(os.sep, "/")
 
 
+def _comment_lines(text: str, lines: List[str]) -> List[Tuple[int, str]]:
+    """(lineno, comment text) for every *real* comment token — pragma text
+    inside a string literal (e.g. a test fixture) is not a pragma."""
+    try:
+        return [(tok.start[0], tok.string)
+                for tok in tokenize.generate_tokens(
+                    io.StringIO(text).readline)
+                if tok.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError):
+        return [(i, raw) for i, raw in enumerate(lines, start=1)
+                if "#" in raw]
+
+
 @dataclass
 class SourceFile:
-    """One parsed Python source file plus its suppression pragmas."""
+    """One parsed Python source file plus its suppression pragmas.
+
+    Suppression *usage* is tracked: every time a pragma actually suppresses
+    a finding, the declaring ``(line, rule)`` is recorded, so
+    :meth:`stale_pragmas` can report dead suppressions after a full-checker
+    run (docs/ANALYSIS.md, "Stale pragmas")."""
     path: str                      # absolute
     rel: str                       # repo-relative (fingerprint key)
     text: str
@@ -44,6 +64,13 @@ class SourceFile:
     tree: ast.Module
     allow: Dict[int, Set[str]] = field(default_factory=dict)
     allow_file: Set[str] = field(default_factory=set)
+    #: pragma physical line -> rules an ``allow[...]`` there declares
+    pragma_lines: Dict[int, Set[str]] = field(default_factory=dict)
+    #: rule -> physical line of its ``allow-file[...]`` pragma
+    file_pragma_lines: Dict[str, int] = field(default_factory=dict)
+    #: ``(pragma line, rule)`` pairs that suppressed at least one finding
+    used_pragmas: Set[Tuple[int, str]] = field(default_factory=set)
+    used_file_pragmas: Set[str] = field(default_factory=set)
 
     @classmethod
     def parse(cls, path: str) -> "SourceFile":
@@ -53,18 +80,25 @@ class SourceFile:
         tree = ast.parse(text, filename=path)
         allow: Dict[int, Set[str]] = {}
         allow_file: Set[str] = set()
-        for i, raw in enumerate(lines, start=1):
-            for kind, rules in _PRAGMA.findall(raw):
+        pragma_lines: Dict[int, Set[str]] = {}
+        file_pragma_lines: Dict[str, int] = {}
+        for i, comment in _comment_lines(text, lines):
+            for kind, rules in _PRAGMA.findall(comment):
                 names = {r.strip() for r in rules.split(",") if r.strip()}
                 if kind == "allow-file":
                     allow_file |= names
+                    for name in sorted(names):
+                        file_pragma_lines.setdefault(name, i)
                 else:
                     # a pragma covers its own line and the one below, so a
                     # standalone comment can sanction the next statement
                     allow.setdefault(i, set()).update(names)
                     allow.setdefault(i + 1, set()).update(names)
+                    pragma_lines.setdefault(i, set()).update(names)
         return cls(path=path, rel=rel_path(path), text=text, lines=lines,
-                   tree=tree, allow=allow, allow_file=allow_file)
+                   tree=tree, allow=allow, allow_file=allow_file,
+                   pragma_lines=pragma_lines,
+                   file_pragma_lines=file_pragma_lines)
 
     def line(self, n: int) -> str:
         """The 1-indexed physical source line (empty when out of range)."""
@@ -72,8 +106,27 @@ class SourceFile:
 
     def allowed(self, lineno: int, rule: str) -> bool:
         if rule in self.allow_file:
+            self.used_file_pragmas.add(rule)
             return True
-        return rule in self.allow.get(lineno, ())
+        if rule in self.allow.get(lineno, ()):
+            # credit the declaring pragma: on this line or the one above
+            for decl in (lineno, lineno - 1):
+                if rule in self.pragma_lines.get(decl, ()):
+                    self.used_pragmas.add((decl, rule))
+            return True
+        return False
+
+    def stale_pragmas(self) -> List[Tuple[int, str]]:
+        """``(line, rule)`` for every declared pragma rule that suppressed
+        nothing. Only meaningful after *all* AST checkers have run over this
+        file — a subset run would report false staleness."""
+        stale = [(line, rule)
+                 for line, rules in self.pragma_lines.items()
+                 for rule in rules if (line, rule) not in self.used_pragmas]
+        stale.extend((line, rule)
+                     for rule, line in self.file_pragma_lines.items()
+                     if rule not in self.used_file_pragmas)
+        return sorted(stale)
 
     def finding(self, checker: str, rule: str, node: ast.AST, message: str,
                 scope: str = "", suggestion: str = "") -> Optional[Finding]:

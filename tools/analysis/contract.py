@@ -1,0 +1,252 @@
+"""Contract checker: docs/SIMULATION.md and docs/API.md *are* the spec —
+this checker cross-validates them against the code, so docs and engines can
+never silently diverge.
+
+Two contracts, both repo-level (run once per invocation, not per file):
+
+* **Event tie-break ranks** — the numbered table under "Event heap
+  tie-break order" in ``docs/SIMULATION.md`` lists every ``EventKind`` with
+  its integer rank. The checker parses the table and diffs it against the
+  actual ``EventKind`` values in ``src/repro/core/events.py`` and the kind
+  strings ``core/disruption.py`` schedules. Rules: ``rank-mismatch``
+  (documented rank != code rank), ``undocumented-kind`` (code kind missing
+  from the table), ``unknown-event-kind`` (table names a kind the enum does
+  not define), ``disruption-kind`` (a disruption kind string with no
+  matching ``EventKind``).
+
+* **Result schema fields** — the ``methods.<m>`` row of the result-schema
+  table in ``docs/API.md`` enumerates the unified per-method fields in
+  backticks. The checker diffs that list against the ``MethodResult``
+  dataclass in ``src/repro/core/scenario.py``. Rules: ``undocumented-field``
+  (a dataclass field the table omits), ``unknown-field`` (the table names a
+  field the dataclass lacks).
+
+The module-level ``*_PATH`` constants exist so mutation tests can point the
+checker at a deliberately-broken copy and prove it fires.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Set, Tuple
+
+from tools.analysis.base import REPO_ROOT, rel_path
+from tools.analysis.findings import Finding
+
+CHECKER = "contract"
+
+DOC_PATH = os.path.join(REPO_ROOT, "docs", "SIMULATION.md")
+API_PATH = os.path.join(REPO_ROOT, "docs", "API.md")
+EVENTS_PATH = os.path.join(REPO_ROOT, "src", "repro", "core", "events.py")
+DISRUPTION_PATH = os.path.join(REPO_ROOT, "src", "repro", "core",
+                               "disruption.py")
+SCENARIO_PATH = os.path.join(REPO_ROOT, "src", "repro", "core",
+                             "scenario.py")
+
+#: The SIMULATION.md heading that opens the tie-break table.
+_TIEBREAK_HEADING = "Event heap tie-break order"
+#: ``apostrophe-free `NAME` (rank)`` entries inside the tie-break section.
+_DOC_RANK = re.compile(r"`([A-Z][A-Z0-9_]*)`\s*\((\d+)\)")
+#: The merged arrival stream is documented as ``*arrivals* (rank)``.
+_DOC_ARRIVAL = re.compile(r"\*arrivals\*\s*\((\d+)\)")
+#: Backticked snake_case field names in the API.md ``methods.<m>`` row.
+_DOC_FIELD = re.compile(r"`([a-z][a-z0-9_]*)`")
+
+
+def _finding(rule: str, path: str, line: int, message: str,
+             scope: str = "", snippet: str = "",
+             suggestion: str = "") -> Finding:
+    return Finding(CHECKER, rule, rel_path(path), line, 0, message,
+                   scope=scope, snippet=snippet, suggestion=suggestion)
+
+
+# ----------------------------------------------------------- tie-break ranks
+
+def _doc_ranks(md_text: str) -> Tuple[Dict[str, int], int]:
+    """(kind name -> documented rank, section start line) from the tie-break
+    section of SIMULATION.md. The section ends at the next ``## `` heading."""
+    lines = md_text.splitlines()
+    start = end = None
+    for i, raw in enumerate(lines):
+        if raw.startswith("## ") and _TIEBREAK_HEADING in raw:
+            start = i
+        elif start is not None and raw.startswith("## "):
+            end = i
+            break
+    if start is None:
+        return {}, 0
+    section = "\n".join(lines[start:end])
+    ranks = {name: int(rank) for name, rank in _DOC_RANK.findall(section)}
+    m = _DOC_ARRIVAL.search(section)
+    if m:
+        ranks["ARRIVAL"] = int(m.group(1))
+    return ranks, start + 1
+
+
+def _code_ranks(py_text: str) -> Dict[str, int]:
+    """``EventKind`` member -> integer value, from the events module AST."""
+    tree = ast.parse(py_text)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EventKind":
+            out: Dict[str, int] = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and isinstance(stmt.value, ast.Constant) \
+                        and isinstance(stmt.value.value, int):
+                    out[stmt.targets[0].id] = stmt.value.value
+            return out
+    return {}
+
+
+def _disruption_kinds(py_text: str) -> List[str]:
+    """The ``EVENT_KINDS`` kind strings disruption schedules may carry."""
+    tree = ast.parse(py_text)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                node.targets[0].id == "EVENT_KINDS" and \
+                isinstance(node.value, (ast.Tuple, ast.List)):
+            return [e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+    return []
+
+
+def _check_event_ranks() -> List[Finding]:
+    findings: List[Finding] = []
+    with open(DOC_PATH) as f:
+        doc_text = f.read()
+    with open(EVENTS_PATH) as f:
+        events_text = f.read()
+    doc, doc_line = _doc_ranks(doc_text)
+    code = _code_ranks(events_text)
+
+    if not doc:
+        return [_finding(
+            "unknown-event-kind", DOC_PATH, 1,
+            f'no "{_TIEBREAK_HEADING}" table found in SIMULATION.md — the '
+            f"tie-break contract is no longer documented",
+            scope="tiebreak", snippet=_TIEBREAK_HEADING,
+            suggestion="restore the numbered rank table (docs/SIMULATION.md)")]
+    if not code:
+        return [_finding(
+            "undocumented-kind", EVENTS_PATH, 1,
+            "no EventKind enum with integer members found in events.py",
+            scope="EventKind", snippet="class EventKind",
+            suggestion="keep the EventKind IntEnum parseable (plain NAME = "
+                       "int assignments)")]
+
+    for name in sorted(set(doc) & set(code)):
+        if doc[name] != code[name]:
+            findings.append(_finding(
+                "rank-mismatch", DOC_PATH, doc_line,
+                f"SIMULATION.md ranks {name} at {doc[name]} but "
+                f"events.py defines {name} = {code[name]} — the documented "
+                f"tie-break order no longer matches the engines",
+                scope=f"tiebreak.{name}",
+                snippet=f"{name} ({doc[name]}) != {name} = {code[name]}",
+                suggestion="fix whichever side drifted; ranks [0, 3] are "
+                           "pinned by tests/test_sim_properties.py"))
+    for name in sorted(set(code) - set(doc)):
+        findings.append(_finding(
+            "undocumented-kind", EVENTS_PATH, 1,
+            f"EventKind.{name} = {code[name]} is not in SIMULATION.md's "
+            f"tie-break table — every rank is load-bearing and must be "
+            f"documented",
+            scope=f"EventKind.{name}", snippet=f"{name} = {code[name]}",
+            suggestion="add the kind to the tie-break table in "
+                       "docs/SIMULATION.md"))
+    for name in sorted(set(doc) - set(code)):
+        findings.append(_finding(
+            "unknown-event-kind", DOC_PATH, doc_line,
+            f"SIMULATION.md documents event kind {name} ({doc[name]}) but "
+            f"EventKind does not define it",
+            scope=f"tiebreak.{name}", snippet=f"{name} ({doc[name]})",
+            suggestion="drop the stale table entry or restore the enum "
+                       "member"))
+
+    with open(DISRUPTION_PATH) as f:
+        disruption_text = f.read()
+    for kind in _disruption_kinds(disruption_text):
+        if kind.upper() not in code:
+            findings.append(_finding(
+                "disruption-kind", DISRUPTION_PATH, 1,
+                f"disruption kind string {kind!r} has no matching "
+                f"EventKind.{kind.upper()} — schedules carrying it cannot "
+                f"be injected into the event heap",
+                scope=f"EVENT_KINDS.{kind}", snippet=f'"{kind}"',
+                suggestion="keep EVENT_KINDS entries aligned with "
+                           "EventKind member names (lowercased)"))
+    return findings
+
+
+# --------------------------------------------------------- result schema
+
+def _doc_fields(md_text: str) -> Tuple[Set[str], int]:
+    """Backticked field names in the ``methods.<m>`` table row of API.md."""
+    for i, raw in enumerate(md_text.splitlines(), start=1):
+        if raw.lstrip().startswith("| `methods.<m>`"):
+            names = set(_DOC_FIELD.findall(raw))
+            names.discard("m")      # from the `methods.<m>` key itself
+            return names, i
+    return set(), 0
+
+
+def _dataclass_fields(py_text: str, class_name: str) -> Set[str]:
+    tree = ast.parse(py_text)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            return {stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)}
+    return set()
+
+
+def _check_result_schema() -> List[Finding]:
+    findings: List[Finding] = []
+    with open(API_PATH) as f:
+        api_text = f.read()
+    with open(SCENARIO_PATH) as f:
+        scenario_text = f.read()
+    doc, doc_line = _doc_fields(api_text)
+    fields = _dataclass_fields(scenario_text, "MethodResult")
+
+    if not doc:
+        return [_finding(
+            "unknown-field", API_PATH, 1,
+            "no `methods.<m>` row found in API.md's result-schema table",
+            scope="methods", snippet="methods.<m>",
+            suggestion="restore the unified per-method field row in "
+                       "docs/API.md")]
+    if not fields:
+        return [_finding(
+            "undocumented-field", SCENARIO_PATH, 1,
+            "no MethodResult dataclass with annotated fields found in "
+            "scenario.py", scope="MethodResult", snippet="class MethodResult",
+            suggestion="keep MethodResult an annotated dataclass")]
+
+    for name in sorted(fields - doc):
+        findings.append(_finding(
+            "undocumented-field", SCENARIO_PATH, 1,
+            f"MethodResult.{name} is not in API.md's `methods.<m>` field "
+            f"list — serialized results carry fields the schema doc does "
+            f"not admit",
+            scope=f"MethodResult.{name}", snippet=name,
+            suggestion="add the field to the `methods.<m>` row in "
+                       "docs/API.md"))
+    for name in sorted(doc - fields):
+        findings.append(_finding(
+            "unknown-field", API_PATH, doc_line,
+            f"API.md documents per-method field `{name}` but MethodResult "
+            f"does not define it",
+            scope=f"methods.{name}", snippet=name,
+            suggestion="drop the stale field from the doc row or add it to "
+                       "MethodResult"))
+    return findings
+
+
+def check_repo() -> List[Finding]:
+    """All contract findings for the current tree (both contracts)."""
+    return _check_event_ranks() + _check_result_schema()

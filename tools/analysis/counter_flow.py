@@ -1,0 +1,230 @@
+"""Counter-flow checker: every fleet counter has a law, a writer, and a
+projection — verified by AST dataflow over both engines.
+
+The engines accumulate ~25 counters (``n_cold``, ``pages_transferred``,
+cache hit tiers, disruption counters, ...) that the unified result schema
+(``scenario.MethodResult``) surfaces and the paper-band checks read. Three
+things can silently rot:
+
+* a counter exists but no conservation law covers it (nobody can say what
+  "correct" means for it) — ``undeclared-counter``;
+* the event engine stops writing a declared counter (a dropped increment:
+  the result quietly reads zero forever) — ``unmutated-counter``;
+* a counter is accumulated but never projected into ``MethodResult``, so
+  serialized results silently lose it — ``unprojected-counter``.
+
+The declarations live in ``config.FLEET_COUNTERS`` (counter -> law +
+projection target) / ``config.COUNTER_LAWS`` / ``config.FLEET_RESULT_STATE``
+(non-counter fields). Drift *in the declarations* is also a finding:
+``unknown-counter`` (declared name that is not a ``FleetResult`` field) and
+``unknown-law`` (a cited law with no definition).
+
+Repo-level: runs once per invocation over the module-level ``*_PATH``
+targets (monkeypatchable, so mutation tests can prove detection on a
+deliberately-broken copy).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis import config
+from tools.analysis.base import REPO_ROOT, rel_path
+from tools.analysis.findings import Finding
+
+CHECKER = "counter-flow"
+
+FLEET_PATH = os.path.join(REPO_ROOT, "src", "repro", "core", "fleet.py")
+FLEET_VEC_PATH = os.path.join(REPO_ROOT, "src", "repro", "core",
+                              "fleet_vec.py")
+SCENARIO_PATH = os.path.join(REPO_ROOT, "src", "repro", "core",
+                             "scenario.py")
+
+
+def _finding(rule: str, path: str, line: int, message: str,
+             scope: str = "", snippet: str = "",
+             suggestion: str = "") -> Finding:
+    return Finding(CHECKER, rule, rel_path(path), line, 0, message,
+                   scope=scope, snippet=snippet, suggestion=suggestion)
+
+
+def _dataclass_fields(tree: ast.Module, class_name: str
+                      ) -> Tuple[Set[str], int]:
+    """(annotated field names, class lineno) of ``class_name`` in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            return ({stmt.target.id for stmt in node.body
+                     if isinstance(stmt, ast.AnnAssign)
+                     and isinstance(stmt.target, ast.Name)}, node.lineno)
+    return set(), 1
+
+
+def _result_writes(tree: ast.Module) -> Dict[str, int]:
+    """attr -> first write lineno, over every variable assigned from a
+    ``FleetResult(...)`` call: constructor keywords count as writes, as do
+    ``<var>.<attr>`` assignments and augmented assignments."""
+    res_vars: Set[str] = set()
+    writes: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                isinstance(node.value, ast.Call):
+            callee = node.value.func
+            name = callee.id if isinstance(callee, ast.Name) else \
+                callee.attr if isinstance(callee, ast.Attribute) else ""
+            if name == "FleetResult":
+                res_vars.add(node.targets[0].id)
+                for kw in node.value.keywords:
+                    if kw.arg:
+                        writes.setdefault(kw.arg, node.lineno)
+    if not res_vars:
+        return writes
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id in res_vars:
+                    writes.setdefault(t.attr, node.lineno)
+    return writes
+
+
+def _projection(tree: ast.Module) -> Tuple[Set[str], Set[str], int]:
+    """From ``_method_result``: (MethodResult(...) keyword names, ``r.<attr>``
+    reads of the raw result, function lineno)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and \
+                node.name == "_method_result":
+            raw = node.args.args[0].arg if node.args.args else "r"
+            kwargs: Set[str] = set()
+            reads: Set[str] = set()
+            for inner in ast.walk(node):
+                if isinstance(inner, ast.Call) and \
+                        isinstance(inner.func, ast.Name) and \
+                        inner.func.id == "MethodResult":
+                    kwargs |= {kw.arg for kw in inner.keywords if kw.arg}
+                if isinstance(inner, ast.Attribute) and \
+                        isinstance(inner.value, ast.Name) and \
+                        inner.value.id == raw:
+                    reads.add(inner.attr)
+            return kwargs, reads, node.lineno
+    return set(), set(), 1
+
+
+def check_repo() -> List[Finding]:
+    findings: List[Finding] = []
+    with open(FLEET_PATH) as f:
+        fleet_tree = ast.parse(f.read())
+    with open(FLEET_VEC_PATH) as f:
+        vec_tree = ast.parse(f.read())
+    with open(SCENARIO_PATH) as f:
+        scenario_tree = ast.parse(f.read())
+
+    fields, cls_line = _dataclass_fields(fleet_tree, "FleetResult")
+    if not fields:
+        return [_finding(
+            "unknown-counter", FLEET_PATH, 1,
+            "no FleetResult dataclass with annotated fields found in "
+            "fleet.py", scope="FleetResult", snippet="class FleetResult",
+            suggestion="keep FleetResult an annotated dataclass")]
+    declared = set(config.FLEET_COUNTERS) | config.FLEET_RESULT_STATE
+
+    # ------------------------------------------------ declaration hygiene
+    for name in sorted(set(config.FLEET_COUNTERS) - fields):
+        findings.append(_finding(
+            "unknown-counter", FLEET_PATH, cls_line,
+            f"config.FLEET_COUNTERS declares {name!r} but FleetResult has "
+            f"no such field — the declaration table drifted from the code",
+            scope=f"FLEET_COUNTERS.{name}", snippet=name,
+            suggestion="remove the stale entry from tools/analysis/"
+                       "config.py or restore the field"))
+    for name in sorted(config.FLEET_RESULT_STATE - fields):
+        findings.append(_finding(
+            "unknown-counter", FLEET_PATH, cls_line,
+            f"config.FLEET_RESULT_STATE lists {name!r} but FleetResult has "
+            f"no such field", scope=f"FLEET_RESULT_STATE.{name}",
+            snippet=name,
+            suggestion="remove the stale entry from tools/analysis/"
+                       "config.py"))
+    for name, (law, _target) in sorted(config.FLEET_COUNTERS.items()):
+        if law not in config.COUNTER_LAWS:
+            findings.append(_finding(
+                "unknown-law", FLEET_PATH, cls_line,
+                f"counter {name!r} cites conservation law {law!r} which "
+                f"config.COUNTER_LAWS does not define",
+                scope=f"FLEET_COUNTERS.{name}", snippet=f"{name}: {law}",
+                suggestion="define the law in COUNTER_LAWS or cite an "
+                           "existing one"))
+
+    # ---------------------------------------------------- undeclared fields
+    for name in sorted(fields - declared):
+        findings.append(_finding(
+            "undeclared-counter", FLEET_PATH, cls_line,
+            f"FleetResult.{name} has no declared conservation law and is "
+            f"not listed as result state — nobody can say what a correct "
+            f"value looks like",
+            scope=f"FleetResult.{name}", snippet=name,
+            suggestion="declare it in config.FLEET_COUNTERS (with a law "
+                       "and a projection) or config.FLEET_RESULT_STATE"))
+
+    # ------------------------------------------------- engine write checks
+    fleet_writes = _result_writes(fleet_tree)
+    vec_writes = _result_writes(vec_tree)
+    for path, writes in ((FLEET_PATH, fleet_writes),
+                         (FLEET_VEC_PATH, vec_writes)):
+        for name in sorted(set(writes) - declared):
+            findings.append(_finding(
+                "undeclared-counter", path, writes[name],
+                f"engine writes result field {name!r} that is neither a "
+                f"declared counter nor declared result state",
+                scope=f"write.{name}", snippet=f"res.{name}",
+                suggestion="declare the field in tools/analysis/config.py"))
+    for name in sorted(set(config.FLEET_COUNTERS) & fields):
+        if name not in fleet_writes:
+            findings.append(_finding(
+                "unmutated-counter", FLEET_PATH, cls_line,
+                f"declared counter {name!r} is never written by the event "
+                f"engine — a dropped increment means results silently "
+                f"read its default forever",
+                scope=f"FleetResult.{name}", snippet=name,
+                suggestion="restore the counter mutation in "
+                           "_simulate_fleet_impl or retire the counter"))
+
+    # -------------------------------------------------- projection checks
+    method_fields, _ = _dataclass_fields(scenario_tree, "MethodResult")
+    proj_kwargs, proj_reads, proj_line = _projection(scenario_tree)
+    if not proj_kwargs:
+        findings.append(_finding(
+            "unprojected-counter", SCENARIO_PATH, proj_line,
+            "no MethodResult(...) construction found in "
+            "scenario._method_result — the unified projection is gone",
+            scope="_method_result", snippet="_method_result",
+            suggestion="keep _method_result building MethodResult with "
+                       "explicit keywords"))
+        return findings
+    for name, (_law, target) in sorted(config.FLEET_COUNTERS.items()):
+        if name not in fields:
+            continue    # already reported as unknown-counter
+        field = target.split(".")[0]
+        problem: Optional[str] = None
+        if field not in method_fields:
+            problem = (f"projection target {field!r} is not a MethodResult "
+                       f"field")
+        elif field not in proj_kwargs:
+            problem = (f"_method_result never passes {field!r} to "
+                       f"MethodResult")
+        elif name not in proj_reads:
+            problem = (f"_method_result never reads the raw counter "
+                       f"r.{name}")
+        if problem:
+            findings.append(_finding(
+                "unprojected-counter", SCENARIO_PATH, proj_line,
+                f"counter {name!r} is accumulated by the engines but not "
+                f"projected into the unified result schema: {problem}",
+                scope=f"projection.{name}", snippet=f"{name} -> {target}",
+                suggestion="project the counter in scenario._method_result "
+                           "and document it in docs/API.md"))
+    return findings

@@ -17,7 +17,7 @@ import hashlib
 import json
 import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Set, Tuple
 
 #: Version of the findings-JSON artifact layout (``--json`` output).
 FINDINGS_SCHEMA_VERSION = 1
@@ -82,6 +82,51 @@ def load_baseline(path: Optional[str]) -> Dict[str, int]:
                          f"in {path} (expected {BASELINE_SCHEMA_VERSION})")
     return {fp: int(entry["count"])
             for fp, entry in data.get("findings", {}).items()}
+
+
+def load_baseline_entries(path: Optional[str]) -> Dict[str, Dict[str, Any]]:
+    """Fingerprint -> full baseline entry (count/rule/path/scope/snippet),
+    for stale-entry detection; absent path or file is empty."""
+    if not path:
+        return {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    version = data.get("baseline_schema_version")
+    if version != BASELINE_SCHEMA_VERSION:
+        raise ValueError(f"unsupported baseline_schema_version {version!r} "
+                         f"in {path} (expected {BASELINE_SCHEMA_VERSION})")
+    return dict(data.get("findings", {}))
+
+
+def stale_baseline_findings(entries: Mapping[str, Mapping[str, Any]],
+                            findings: List[Finding],
+                            scanned_rels: Set[str]) -> List[Finding]:
+    """One ``baseline/stale-entry`` finding per grandfathered fingerprint
+    that no current finding consumes — a dead suppression is how a
+    grandfathered bug hides after the offending line changed. Entries whose
+    recorded path was *not* scanned this run are skipped (a partial-path run
+    says nothing about them)."""
+    live = {f.fingerprint for f in findings}
+    stale: List[Finding] = []
+    for fp in sorted(entries):
+        entry = entries[fp]
+        path = str(entry.get("path", ""))
+        if fp in live or path not in scanned_rels:
+            continue
+        stale.append(Finding(
+            "baseline", "stale-entry", path or "tools/analysis/baseline.json",
+            1, 0,
+            f"baseline fingerprint {fp} ({entry.get('rule', '?')}) no "
+            f"longer matches any finding — the grandfathered violation "
+            f"was fixed or moved; prune the entry",
+            scope=str(entry.get("scope", "")),
+            snippet=str(entry.get("snippet", "")),
+            suggestion="re-run with --write-baseline after an audit, or "
+                       "delete the entry"))
+    return stale
 
 
 def write_baseline(path: str, findings: List[Finding]) -> None:

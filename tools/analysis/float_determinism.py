@@ -1,0 +1,137 @@
+"""Float-determinism checker: order-sensitive reductions, at the AST.
+
+The scalar and vectorized fleet engines must produce *bit-identical* float
+arrays (docs/SIMULATION.md, "Vectorized engine"): sha256 over the
+per-request latency/wait vectors is the differential-fuzz contract. Float
+addition is not associative, so any reduction whose operand order is not
+pinned can silently break it:
+
+* ``unstable-sort`` — ``np.sort`` / ``np.argsort`` without
+  ``kind="stable"``: numpy's default introsort is *unstable*, so equal keys
+  (including ``-0.0`` vs ``0.0``) can land in either order and feed a
+  different accumulation order downstream;
+* ``set-reduction`` — ``sum`` / ``math.fsum`` / ``np.sum`` over a set (or a
+  generator drawing from one): set iteration is hash-order, so the float
+  accumulation order differs across processes;
+* ``keyed-extremum-over-set`` — ``min`` / ``max`` with a ``key=`` over a
+  set: ties resolve to whichever element hash-order yields first.
+
+Scope: ``config.FLOAT_DETERMINISM_SCOPE`` (code shared by both engines).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from tools.analysis import config
+from tools.analysis.base import SourceFile, dotted_name, qualname_index
+from tools.analysis.findings import Finding
+
+CHECKER = "float-determinism"
+
+_STABLE_KINDS = {"stable", "mergesort"}
+_NP_SORTS = {"sort", "argsort"}
+_REDUCERS = {"sum", "fsum"}          # bare sum(), math.fsum / np.sum via tail
+_EXTREMA = {"min", "max"}
+
+
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def check(src: SourceFile) -> List[Finding]:
+    if not config.in_scope(src.rel, config.FLOAT_DETERMINISM_SCOPE):
+        return []
+    np_names = _numpy_aliases(src.tree)
+    scopes = qualname_index(src.tree)
+    findings: List[Finding] = []
+
+    def emit(rule: str, node: ast.AST, message: str, suggestion: str) -> None:
+        f = src.finding(CHECKER, rule, node, message,
+                        scope=scopes.get(node, ""), suggestion=suggestion)
+        if f is not None:
+            findings.append(f)
+
+    # statically-known set locals per scope (same approximation as the
+    # determinism checker's set-iteration rule)
+    set_vars: Dict[str, Set[str]] = {}
+
+    def _is_set_expr(node: ast.AST, scope: str) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return (_is_set_expr(node.left, scope)
+                    or _is_set_expr(node.right, scope))
+        if isinstance(node, ast.Name):
+            return node.id in set_vars.get(scope, set())
+        return False
+
+    def _draws_from_set(node: ast.AST, scope: str) -> bool:
+        """The reduction operand itself, or any generator it iterates."""
+        if _is_set_expr(node, scope):
+            return True
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            return any(_is_set_expr(g.iter, scope) for g in node.generators)
+        return False
+
+    for node in ast.walk(src.tree):
+        scope = scopes.get(node, "")
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                _is_set_expr(node.value, scope):
+            set_vars.setdefault(scope, set()).add(node.targets[0].id)
+
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        scope = scopes.get(node, "")
+        fname = dotted_name(node.func) or ""
+        parts = fname.split(".")
+        head, tail = parts[0], parts[-1]
+
+        # ------------------------------------------------------ unstable-sort
+        if len(parts) >= 2 and head in np_names and tail in _NP_SORTS:
+            kind = next((kw.value for kw in node.keywords
+                         if kw.arg == "kind"), None)
+            stable = (isinstance(kind, ast.Constant)
+                      and kind.value in _STABLE_KINDS)
+            if not stable:
+                emit("unstable-sort", node,
+                     f"'{fname}' without kind=\"stable\" — numpy's default "
+                     f"introsort reorders equal keys (incl. -0.0 vs 0.0), "
+                     f"so downstream float accumulation order can differ "
+                     f"between engines",
+                     f'pass kind="stable" to {fname}(...)')
+
+        # ------------------------------------------------------ set-reduction
+        is_reducer = ((len(parts) == 1 and tail == "sum")
+                      or (len(parts) >= 2 and tail in _REDUCERS))
+        if is_reducer and node.args and \
+                _draws_from_set(node.args[0], scope):
+            emit("set-reduction", node,
+                 f"'{fname}' accumulates over a set — iteration is "
+                 f"hash-order, and float addition is not associative, so "
+                 f"the result differs across processes",
+                 "reduce over sorted(...) (or keep a list/dict, which "
+                 "preserve insertion order)")
+
+        # -------------------------------------------- keyed-extremum-over-set
+        if len(parts) == 1 and tail in _EXTREMA and node.args and \
+                any(kw.arg == "key" for kw in node.keywords) and \
+                _draws_from_set(node.args[0], scope):
+            emit("keyed-extremum-over-set", node,
+                 f"'{tail}' with key= over a set — key ties resolve to "
+                 f"whichever element hash-order yields first",
+                 "iterate sorted(...) so ties break deterministically")
+
+    return findings

@@ -38,6 +38,8 @@ from tools.analysis.findings import Finding
 CHECKER = "spec-registry"
 
 #: A JSON object is treated as a scenario spec iff it has one of these keys.
+#: ``traces`` only counts when shaped like a component (string or mapping):
+#: golden test fixtures carry raw trace *arrays* under the same key.
 _SCENARIO_MARKERS = ("schema_version", "engine", "traces")
 
 #: spec field -> how to find its registry (module, attribute).
@@ -81,8 +83,11 @@ def _factory_signature(obj: Any) -> Optional[inspect.Signature]:
 
 
 def looks_like_scenario(data: Any) -> bool:
-    return isinstance(data, Mapping) and \
-        any(k in data for k in _SCENARIO_MARKERS)
+    if not isinstance(data, Mapping):
+        return False
+    if "schema_version" in data or "engine" in data:
+        return True
+    return isinstance(data.get("traces"), (str, Mapping))
 
 
 def check_file(path: str) -> List[Finding]:

@@ -13,7 +13,11 @@ replay regresses:
     and audited scenario x method (``bench_policies``) must be finite and
     >= 0 — a negative gap means an online policy beat the hindsight floor,
     i.e. the floor (or an engine) is wrong (docs/SIMULATION.md, "Oracle
-    and disruption semantics").
+    and disruption semantics");
+  * sanitizer overhead: the repro-san invariant sanitizer
+    (docs/ANALYSIS.md, "Runtime sanitizer") must keep a sanitized smoke
+    run within 3x the unsanitized wall clock — it has to stay cheap
+    enough to leave on in CI.
 
 Runs locally too:
 
@@ -29,6 +33,7 @@ SCALE_FLOOR = 1_000_000          # azure_scale invocation floor
 SCALE_BUDGET_S = 60.0            # azure_scale wall-clock budget (CI hardware)
 SCALE_XL_FLOOR = 10_000_000      # azure_scale_xl invocation floor (fleet_vec)
 SCALE_XL_BUDGET_S = 60.0         # azure_scale_xl wall-clock budget
+SANITIZE_RATIO_MAX = 3.0         # sanitized / plain wall-clock budget
 
 
 def main(path="results/BENCH_smoke.json"):
@@ -66,6 +71,15 @@ def main(path="results/BENCH_smoke.json"):
         f"azure_scale_xl took {wall_xl:.1f}s (budget {SCALE_XL_BUDGET_S}s) — " \
         f"vectorized engine (fleet_vec) hot path regressed"
 
+    san_ratio = head["sanitize_overhead_ratio"]
+    assert isinstance(san_ratio, (int, float)) and math.isfinite(san_ratio) \
+        and san_ratio > 0, \
+        f"sanitize_overhead_ratio is not a positive finite number: {san_ratio!r}"
+    assert san_ratio <= SANITIZE_RATIO_MAX, \
+        f"sanitized run took {san_ratio:.2f}x the plain wall clock " \
+        f"(budget {SANITIZE_RATIO_MAX}x) — the repro-san sanitizer got too " \
+        f"expensive to leave on"
+
     gap = head["oracle_gap"]
     for key in ("min_total_gap_s", "min_p99_gap_s"):
         v = gap[key]
@@ -84,7 +98,8 @@ def main(path="results/BENCH_smoke.json"):
           f"azure_scale_xl {n_inv_xl:,} invocations in {wall_xl:.1f}s "
           f"(< {SCALE_XL_BUDGET_S:.0f}s), "
           f"oracle dominance holds over {gap['n_cells']} cell(s) "
-          f"(min gap {gap['min_total_gap_s']:.3f}s)")
+          f"(min gap {gap['min_total_gap_s']:.3f}s), "
+          f"sanitizer overhead {san_ratio:.2f}x (< {SANITIZE_RATIO_MAX:.0f}x)")
     return 0
 
 
