@@ -301,6 +301,62 @@ def run() -> Dict:
     emit("fleet/sanitize_overhead", sanitized_wall_s * 1e6,
          f"plain={plain_wall_s:.2f}s ratio={ratio:.2f}x (budget 3x)")
 
+    # ------------------------------------------------------ streaming ingestion
+    # The azure_csv_stream scenario replays the checked-in Azure-schema gzip
+    # fixture through the out-of-core chunked path (core/trace_stream.py):
+    # the CSV is validated and spilled into per-window binaries at parse time
+    # and the event engine consumes arrival chunks natively — the trace is
+    # never materialized. The streaming contract (stream=true is invisible in
+    # the results) is asserted end-to-end here: the same spec rerun with
+    # stream=false must be sha256-identical per method. Peak resident
+    # arrivals are recorded so the nightly ≥10M scale run
+    # (tools/ci/stream_scale.py) has a smoke-scale twin in the artifact.
+    import hashlib
+
+    import numpy as np
+
+    from repro.core.traces import TRACE_GENERATORS
+
+    def _sha(a) -> str:
+        return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+    scn_stream = Scenario.from_file(scenario_path("azure_csv_stream"))
+    t0 = time.perf_counter()
+    res_stream = run_scenario(scn_stream, smoke=smoke)
+    stream_wall_s = time.perf_counter() - t0
+    res_mem = run_scenario(
+        scn_stream.with_overrides({"traces.kwargs.stream": False}),
+        smoke=smoke)
+    for method, rw in res_stream.raw.items():
+        validated_samples(rw, f"fleet/stream_ingest/{method}")
+        assert _sha(rw.latency_samples_s) == \
+            _sha(res_mem.raw[method].latency_samples_s), \
+            f"stream_ingest/{method}: streamed and in-memory runs diverged " \
+            f"— the streaming bit-identity contract is broken"
+    st = TRACE_GENERATORS.build(scn_stream.traces.name,
+                                **scn_stream.traces.kwargs)
+    for _ in st.chunks():
+        pass
+    n_inv_stream = max(r.n_invocations for r in res_stream.raw.values())
+    out["stream_ingest"] = {
+        "n_invocations": n_inv_stream,
+        "n_methods": len(res_stream.raw),
+        "wall_clock_s": stream_wall_s,
+        "n_chunks": st.stats.n_chunks,
+        "peak_resident_arrivals": st.stats.peak_resident_arrivals,
+        "resident_fraction": (st.stats.peak_resident_arrivals
+                              / max(st.stats.n_arrivals, 1)),
+        "bit_identical_to_in_memory": True,
+    }
+    if hasattr(st, "close"):
+        st.close()
+    emit("fleet/stream_ingest", stream_wall_s * 1e6,
+         f"{n_inv_stream} invocations via {out['stream_ingest']['n_chunks']} "
+         f"chunks, peak resident "
+         f"{out['stream_ingest']['peak_resident_arrivals']} "
+         f"({out['stream_ingest']['resident_fraction']:.1%}), sha-equal to "
+         f"in-memory")
+
     # ------------------------------------------------------- placement + pre-warm
     out["placement"] = {}
     for r in sweep_file(scenario_path("placement"),

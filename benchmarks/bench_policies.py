@@ -69,6 +69,7 @@ def _oracle_gap_audit(smoke: bool) -> Tuple[Dict, Dict]:
     ``(per_spec_gaps, skipped)``."""
     from repro.core.oracle import gap_report, oracle_from_scenario
     from repro.core.scenario import RunOverrides, Scenario, run
+    from repro.core.trace_stream import TraceStream
     from repro.core.traces import TRACE_GENERATORS
 
     per_spec: Dict = {}
@@ -79,6 +80,13 @@ def _oracle_gap_audit(smoke: bool) -> Tuple[Dict, Dict]:
             continue                   # no fleet policies to dominate
         eff = scn.smoke_scaled() if smoke else scn
         traces = TRACE_GENERATORS.build(eff.traces.name, **eff.traces.kwargs)
+        if isinstance(traces, TraceStream):
+            # the audit shares one trace-object list between engine and
+            # oracle; stream/materialized runs are bit-identical by contract
+            # (docs/TRACES.md), so materializing changes nothing it measures
+            st, traces = traces, traces.materialize()
+            if hasattr(st, "close"):
+                st.close()
         n = sum(len(t.arrivals_min) for t in traces)
         if n > AUDIT_MAX_ARRIVALS:
             skipped[eff.name] = n

@@ -1,0 +1,60 @@
+"""Regenerate ``azure_sample.csv.gz`` — the checked-in Azure-schema fixture
+behind ``benchmarks/scenarios/azure_csv_stream.json`` and the streaming tests.
+
+The layout mirrors the public Azure Functions invocation dataset: leading id
+columns (``HashOwner/HashApp/HashFunction/Trigger``), then one integer count
+column per minute of one day. Functions sharing a ``HashApp`` share a
+dependency image; rates are lognormal-skewed like the paper's §4.5 fit, so
+the fixture exercises the same heavy-skew regime as the synthetic fleets.
+
+Byte-deterministic: fixed seed, ``gzip.GzipFile(mtime=0)`` (no timestamp in
+the member header). Run from the repo root::
+
+    PYTHONPATH=src python benchmarks/data/make_azure_sample.py
+"""
+import gzip
+import io
+import os
+
+import numpy as np
+
+N_FUNCTIONS = 64
+N_APPS = 12
+MINUTES = 1440
+SEED = 20260809
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "azure_sample.csv.gz")
+
+
+def render_csv() -> bytes:
+    rng = np.random.default_rng(SEED)
+    # lognormal-skewed per-function rates, clipped so the busiest functions
+    # dominate (the Azure regime) but the file stays small
+    rates = np.minimum(np.exp(rng.normal(-1.5, 1.6, size=N_FUNCTIONS)), 8.0)
+    apps = rng.integers(0, N_APPS, size=N_FUNCTIONS)
+    buf = io.StringIO()
+    header = ["HashOwner", "HashApp", "HashFunction", "Trigger"]
+    header += [str(m) for m in range(1, MINUTES + 1)]
+    buf.write(",".join(header) + "\n")
+    for f in range(N_FUNCTIONS):
+        counts = rng.poisson(rates[f], size=MINUTES)
+        row = [f"owner{apps[f]:04x}", f"app{apps[f]:04x}",
+               f"fn{f:08x}", "http"]
+        # the Azure schema writes absent minutes as empty cells
+        row += [str(c) if c else "" for c in counts]
+        buf.write(",".join(row) + "\n")
+    return buf.getvalue().encode()
+
+
+def main() -> None:
+    raw = render_csv()
+    with open(OUT, "wb") as f:
+        with gzip.GzipFile(fileobj=f, mode="wb", filename="", mtime=0) as gz:
+            gz.write(raw)
+    print(f"wrote {OUT} ({os.path.getsize(OUT)} bytes, "
+          f"{len(raw)} uncompressed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,13 @@ def _headline(outs: dict) -> dict:
             fleet["azure_scale_xl"]["n_invocations"]
         head["azure_scale_xl_wall_clock_s"] = \
             fleet["azure_scale_xl"]["wall_clock_s"]
+    if "stream_ingest" in fleet:
+        # out-of-core ingestion headline: invocation count is deterministic
+        # (trend-gated exactly); wall clock is trend-gated with slack
+        head["stream_ingest_n_invocations"] = \
+            fleet["stream_ingest"]["n_invocations"]
+        head["stream_ingest_wall_clock_s"] = \
+            fleet["stream_ingest"]["wall_clock_s"]
     if "sanitize_overhead" in fleet:
         # repro-san cost headline (check_bench fails above 3x)
         head["sanitize_overhead_ratio"] = \

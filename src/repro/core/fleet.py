@@ -69,6 +69,7 @@ from repro.core.pool import CapacityLedger, ClusterImageCache
 from repro.core.sanitize import FleetSanitizer, sanitize_enabled
 from repro.core.simulator import (CostModel, latency_percentiles,
                                   method_cold_latency_s)
+from repro.core.trace_stream import TraceStream
 from repro.core.traces import Trace
 
 # EventKind ranks as plain ints: the hot loop compares and pushes these
@@ -318,7 +319,7 @@ def simulate_fleet(
 
 
 def _simulate_fleet_impl(
-    traces: List[Trace],
+    traces: Union[List[Trace], TraceStream],
     method: str,
     cost: CostModel,
     fleet: Optional[FleetConfig] = None,
@@ -328,7 +329,14 @@ def _simulate_fleet_impl(
     contract); called by :func:`repro.core.scenario.run`. ``sanitizer``
     threads a :class:`repro.core.sanitize.FleetSanitizer` through the run
     (built automatically under ``REPRO_SANITIZE=1``); its checks are
-    assertions only, so a sanitized run returns bit-identical results."""
+    assertions only, so a sanitized run returns bit-identical results.
+
+    ``traces`` may be a :class:`~repro.core.trace_stream.TraceStream`: the
+    engine then consumes arrival chunks as they are produced (peak arrival
+    residency = one chunk) and returns results bit-identical to running the
+    stream's ``materialize()`` list (docs/TRACES.md). Disruption schedules
+    require a materialized trace (the schedule is built against the horizon,
+    which a stream only knows at the end)."""
     fleet = fleet if fleet is not None else FleetConfig()
     san = sanitizer
     if san is None and sanitize_enabled():
@@ -338,7 +346,13 @@ def _simulate_fleet_impl(
     if fleet.shared_cache_bytes is not None and fleet.page_cost is None:
         raise ValueError("shared_cache_bytes bounds the page-model cluster "
                          "tier; set FleetConfig.page_cost to enable it")
+    is_stream = isinstance(traces, TraceStream)
     disruption = fleet.disruption
+    if is_stream and disruption is not None:
+        raise ValueError(
+            "disruption schedules are built against the trace horizon, which "
+            "a stream only knows after its last chunk; materialize the trace "
+            "(stream=false) to combine disruption with this workload")
     if disruption is not None and disruption.n_workers != fleet.n_workers:
         raise ValueError(
             f"disruption schedule was built for "
@@ -369,8 +383,11 @@ def _simulate_fleet_impl(
     live = workers
     orphans: List[Tuple[float, int, int]] = []   # (req_t, idx, fn) waiting for
                                                  #   ANY worker to come back
-    fn_image = {t.fn_index: t.image_id for t in traces}
-    images = sorted({t.image_id for t in traces})
+    # streams expose per-function metadata (rates/images — bounded by fleet
+    # size) upfront; only the arrival arrays stay chunked
+    trace_meta = traces.meta_traces() if is_stream else traces
+    fn_image = {t.fn_index: t.image_id for t in trace_meta}
+    images = sorted({t.image_id for t in trace_meta})
 
     # Cluster-shared image tier (page model only): one ledger of distinct
     # resident images + who holds them. A cluster-capacity eviction drops the
@@ -427,17 +444,33 @@ def _simulate_fleet_impl(
     # ------------------------------------------------------------- arrival stream
     # Vectorized merge of the per-function arrival arrays; arrivals never enter
     # the event heap — the main loop merges this stream against the heap head.
-    all_t = np.concatenate([t.arrivals_min for t in traces]) if traces else \
-        np.empty((0,))
-    all_fn = np.concatenate([np.full(len(t.arrivals_min), t.fn_index, np.int64)
-                             for t in traces]) if traces else np.empty((0,), np.int64)
-    order = np.argsort(all_t, kind="stable")
-    all_t, all_fn = all_t[order], all_fn[order]
-    n_req = len(all_t)
-    horizon = float(all_t[-1]) if n_req else 0.0
-    res.horizon_min = horizon
+    # A TraceStream skips this materialization entirely: the loop below pulls
+    # one chunk at a time (each chunk is already merged in this same order),
+    # so peak arrival residency is one chunk, not the trace.
+    if is_stream:
+        all_t = np.empty((0,))
+        all_fn = np.empty((0,), np.int64)
+        n_req = 0
+        # finalized to the true last arrival when the stream is exhausted.
+        # Unfinalized reads are safe: the clamps below (`min(..., horizon)`,
+        # `t > horizon`) can only bind at times past the last arrival, and any
+        # event firing while chunks remain is <= the next arrival <= horizon.
+        horizon = float("inf")
+    else:
+        all_t = np.concatenate([t.arrivals_min for t in traces]) if traces \
+            else np.empty((0,))
+        all_fn = np.concatenate(
+            [np.full(len(t.arrivals_min), t.fn_index, np.int64)
+             for t in traces]) if traces else np.empty((0,), np.int64)
+        order = np.argsort(all_t, kind="stable")
+        all_t, all_fn = all_t[order], all_fn[order]
+        n_req = len(all_t)
+        horizon = float(all_t[-1]) if n_req else 0.0
     # preallocated per-request buffers, filled in place by begin_service; an
-    # unfilled (NaN) slot after the loop drains is an engine bug and raises
+    # unfilled (NaN) slot after the loop drains is an engine bug and raises.
+    # Streamed runs grow them geometrically as chunks arrive (a request's
+    # buffer slot exists before its arrival is processed, so queued requests
+    # from earlier chunks always land inside the current capacity).
     samples = np.full(n_req, np.nan)
     waits = np.full(n_req, np.nan)
     events = EventQueue()
@@ -609,6 +642,10 @@ def _simulate_fleet_impl(
             w.metadata_fns.add(fn)
         return lat
 
+    # streamed runs rebind samples/waits (geometric growth) and horizon (set
+    # once the last chunk lands); the closures below MUST see the rebound
+    # values — that is the growth/finalization design, not a stale capture.
+    # repro-lint: allow[stale-capture]
     def begin_service(w: _Worker, inst: _Instance, start: float, svc_s: float,
                       req_t: float, idx: int) -> None:
         """Run one request on ``inst`` starting at ``start`` (>= its previous
@@ -638,6 +675,7 @@ def _simulate_fleet_impl(
         samples[idx] = wait_s + svc_s
         waits[idx] = wait_s
 
+    # repro-lint: allow[stale-capture]
     def retire(w: _Worker, inst: _Instance) -> None:
         """Keep-alive expired: remove the instance, account its residency
         clamped to the trace horizon."""
@@ -646,6 +684,7 @@ def _simulate_fleet_impl(
             insts.remove(inst)
         w.instance_min += max(0.0, min(inst.expires, horizon) - inst.created)
 
+    # repro-lint: allow[stale-capture]
     def spawn_prewarm(t: float, fn: int, expire_at: float) -> None:
         if t > horizon:
             # scheduled past the last arrival: drained, accounted, not spawned
@@ -755,6 +794,7 @@ def _simulate_fleet_impl(
             max_conc = n_alive
         begin_service(w, inst, t, svc, req_t, idx)
 
+    # repro-lint: allow[stale-capture]
     def fail_worker(t: float, w_idx: int) -> None:
         nonlocal live
         w = workers[w_idx]
@@ -853,25 +893,65 @@ def _simulate_fleet_impl(
     # arrival arrays are materialized as plain Python lists once — float/int
     # extraction per numpy element is several times slower at millions of
     # requests — and the heap head is compared field-wise (no tuple builds).
+    # Chunked runs feed the same loop one chunk at a time: the next chunk is
+    # fetched BEFORE any heap event later than the current chunk fires, so
+    # the event/arrival interleaving is identical to the materialized run.
     all_t_list = all_t.tolist()
     all_fn_list = all_fn.tolist()
     heap = events.heap
     pop = events.pop_raw
     i = 0
+    base = 0                      # global index of the current chunk's start
+    n_cur = n_req
+    fn_parts: List[np.ndarray] = []
+    chunk_iter = traces.chunks() if is_stream else None
+    draining = chunk_iter is None  # True once no further arrivals can appear
+    last_t = 0.0
     while True:
+        if i >= n_cur and not draining:
+            chunk = next(chunk_iter, None)
+            if chunk is None:
+                draining = True
+                n_req = base + n_cur
+                # the stream is exhausted: the horizon (last arrival) is now
+                # known, exactly as the materialized path computed it upfront
+                horizon = last_t if n_req else 0.0
+            else:
+                base += n_cur
+                all_t_list = chunk.t_min.tolist()
+                all_fn_list = chunk.fn.tolist()
+                n_cur = len(all_t_list)
+                i = 0
+                last_t = all_t_list[-1]
+                fn_parts.append(chunk.fn)
+                need = base + n_cur
+                if need > len(samples):
+                    grown = np.full(max(need, 2 * len(samples)), np.nan)
+                    grown[:len(samples)] = samples
+                    samples = grown
+                    grown = np.full(len(samples), np.nan)
+                    grown[:len(waits)] = waits
+                    waits = grown
+            continue
         if heap:
             head = heap[0]
-            if (i >= n_req or head[0] < all_t_list[i]
+            if (i >= n_cur or head[0] < all_t_list[i]
                     or (head[0] == all_t_list[i] and head[1] <= _ARRIVAL)):
                 ev = pop()
                 if san is not None and san.check_event(ev[0], ev[1], ev[2]):
                     san.check_books(workers, cluster)
                 handle_event(ev[0], ev[1], ev[3])
                 continue
-        elif i >= n_req:
+        elif i >= n_cur:
             break
-        handle_arrival(all_t_list[i], all_fn_list[i], i)
+        handle_arrival(all_t_list[i], all_fn_list[i], base + i)
         i += 1
+    if is_stream:
+        samples = samples[:n_req]
+        waits = waits[:n_req]
+        all_fn = (np.concatenate(fn_parts) if fn_parts
+                  else np.empty((0,), np.int64))
+    res.horizon_min = horizon
 
     if orphans:
         raise RuntimeError(
@@ -896,7 +976,7 @@ def _simulate_fleet_impl(
     res.placement_warm_hits = pw_hits
     res.placement_pool_hits = pp_hits
     res.max_concurrent_instances = max_conc
-    fns = np.array(sorted({t.fn_index for t in traces}), np.int64)
+    fns = np.array(sorted({t.fn_index for t in trace_meta}), np.int64)
     slots = np.searchsorted(fns, all_fn)
     lat_sums = np.bincount(slots, weights=samples, minlength=len(fns)) \
         if n_req else np.zeros(len(fns))

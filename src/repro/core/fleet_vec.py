@@ -56,7 +56,7 @@ from __future__ import annotations
 
 import os
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -67,6 +67,7 @@ from repro.core.keepalive import PrewarmPolicy
 from repro.core.pool import ClusterImageCache
 from repro.core.sanitize import FleetSanitizer, sanitize_enabled
 from repro.core.simulator import CostModel, method_cold_latency_s
+from repro.core.trace_stream import TraceStream
 from repro.core.traces import Trace
 
 #: Diagnostics for the optional jax.lax.scan path: how many groups the last
@@ -133,12 +134,15 @@ def _setup_capacity_binds(workers: List[_Worker], method: str,
 
 
 # --------------------------------------------------------------- domain guard
-def fast_path_reason(traces: List[Trace], method: str, cost: CostModel,
+def fast_path_reason(traces: Union[List[Trace], TraceStream], method: str,
+                     cost: CostModel,
                      fleet: Optional[FleetConfig] = None) -> Optional[str]:
     """Why this config needs the event-engine fallback; ``None`` = the
     vectorized fast path is provably bit-identical. Raises the same
     validation errors as the event engine (bad worker counts, shared cache
-    without a page model, unknown placement/policy keys)."""
+    without a page model, unknown placement/policy keys). A
+    :class:`~repro.core.trace_stream.TraceStream` always falls back: the
+    event engine consumes its chunks natively."""
     fleet = fleet if fleet is not None else FleetConfig()
     if fleet.n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {fleet.n_workers}")
@@ -148,6 +152,13 @@ def fast_path_reason(traces: List[Trace], method: str, cost: CostModel,
     if isinstance(fleet.placement, str):
         from repro.serving.scheduler import PLACEMENTS
         PLACEMENTS.build(fleet.placement)   # unknown-key parity with the engine
+    if isinstance(traces, TraceStream):
+        # The static-routing theorem needs the full function->image map and
+        # the provider setup phase up front; a stream only reveals arrivals
+        # chunk by chunk, so routing cannot be statically known from a
+        # stream prefix. The event engine consumes chunks natively.
+        return ("streamed traces: routing cannot be statically known from "
+                "a stream prefix")
     if fleet.disruption is not None and fleet.disruption.events:
         if fleet.disruption.n_workers != fleet.n_workers:
             raise ValueError(
@@ -620,7 +631,8 @@ def _simulate_fleet_vec_impl(traces: List[Trace], method: str,
     return res
 
 
-def simulate_fleet_vec(traces: List[Trace], method: str, cost: CostModel,
+def simulate_fleet_vec(traces: Union[List[Trace], TraceStream], method: str,
+                       cost: CostModel,
                        fleet: Optional[FleetConfig] = None,
                        scan: Optional[bool] = None,
                        sanitizer: Optional["FleetSanitizer"] = None

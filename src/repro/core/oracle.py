@@ -59,12 +59,13 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.costmodel import PageCostModel
 from repro.core.simulator import CostModel, method_cold_latency_s
+from repro.core.trace_stream import TraceStream
 from repro.core.traces import Trace
 
 #: Percentile keys reported by :meth:`OracleResult.latency_percentiles`,
@@ -148,9 +149,15 @@ class OracleResult:
         return d
 
 
-def hindsight_floor(traces: Sequence[Trace], method: str, cost: CostModel,
+def hindsight_floor(traces: Union[Sequence[Trace], TraceStream], method: str,
+                    cost: CostModel,
                     page_cost: Optional[PageCostModel] = None) -> OracleResult:
     """The sound per-request latency floor over a completed trace set.
+
+    Accepts a :class:`~repro.core.trace_stream.TraceStream` as well: the
+    floor is accumulated chunk by chunk (a seen-set of function indices
+    carries first-arrival state across chunks), never materializing the
+    arrival arrays, and is bit-identical to the in-memory result.
 
     Each function's first arrival pays :func:`min_cold_latency_s` (no
     instance of it can predate it — see the module docstring); every other
@@ -163,27 +170,46 @@ def hindsight_floor(traces: Sequence[Trace], method: str, cost: CostModel,
     """
     mc = min_cold_latency_s(method, cost, page_cost)
     warm = min(cost.warm_s, mc)
-    all_t = (np.concatenate([np.asarray(t.arrivals_min, np.float64)
-                             for t in traces])
-             if traces else np.empty((0,)))
-    all_fn = (np.concatenate([np.full(len(t.arrivals_min), t.fn_index,
-                                      np.int64) for t in traces])
-              if traces else np.empty((0,), np.int64))
-    order = np.argsort(all_t, kind="stable")     # the engines' merge order
-    all_fn = all_fn[order]
-    samples = np.full(len(all_fn), warm)
-    if len(all_fn):
-        # first merged arrival of each function index pays the cold floor
-        _, first_idx = np.unique(all_fn, return_index=True)
-        samples[first_idx] = mc
-        n_cold = len(first_idx)
-    else:
+    if isinstance(traces, TraceStream):
+        # Chunk-wise accumulation: each chunk arrives in the engines' merge
+        # order, so the first chunk position of a not-yet-seen function is
+        # exactly its first merged-arrival index. Both branches assign the
+        # same two constants at the same global positions => bit-identical.
+        parts: List[np.ndarray] = []
+        seen: set = set()
         n_cold = 0
+        for chunk in traces.chunks():
+            part = np.full(len(chunk.fn), warm)
+            uniq, first_idx = np.unique(chunk.fn, return_index=True)
+            for fn, pos in zip(uniq.tolist(), first_idx.tolist()):
+                if fn not in seen:
+                    seen.add(fn)
+                    part[pos] = mc
+                    n_cold += 1
+            parts.append(part)
+        samples = np.concatenate(parts) if parts else np.empty((0,))
+    else:
+        all_t = (np.concatenate([np.asarray(t.arrivals_min, np.float64)
+                                 for t in traces])
+                 if traces else np.empty((0,)))
+        all_fn = (np.concatenate([np.full(len(t.arrivals_min), t.fn_index,
+                                          np.int64) for t in traces])
+                  if traces else np.empty((0,), np.int64))
+        order = np.argsort(all_t, kind="stable")   # the engines' merge order
+        all_fn = all_fn[order]
+        samples = np.full(len(all_fn), warm)
+        if len(all_fn):
+            # first merged arrival of each function index pays the cold floor
+            _, first_idx = np.unique(all_fn, return_index=True)
+            samples[first_idx] = mc
+            n_cold = len(first_idx)
+        else:
+            n_cold = 0
     return OracleResult(
         method=method,
-        n_invocations=len(all_fn),
+        n_invocations=len(samples),
         n_cold=n_cold,
-        n_warm=len(all_fn) - n_cold,
+        n_warm=len(samples) - n_cold,
         min_cold_s=mc,
         warm_s=cost.warm_s,
         idle_bytes=idle_bytes_for(method, cost),
@@ -251,8 +277,12 @@ def keepalive_frontier(traces: Sequence[Trace], method: str, cost: CostModel,
     dominance gate uses :func:`hindsight_floor`, never this frontier.
 
     Returns ``n_points`` points (at least the two endpoints), byte-minutes
-    non-decreasing.
+    non-decreasing. A :class:`~repro.core.trace_stream.TraceStream` is
+    materialized first (gap sorting needs full per-function arrival arrays) —
+    this is a report path, not part of the out-of-core contract.
     """
+    if isinstance(traces, TraceStream):
+        traces = traces.materialize()
     mc = min_cold_latency_s(method, cost, page_cost)
     gain_s = max(0.0, mc - cost.warm_s)
     idle = idle_bytes_for(method, cost)

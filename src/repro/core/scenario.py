@@ -58,6 +58,7 @@ from repro.core.keepalive import PREWARM_POLICIES, KeepAlivePolicy
 from repro.core.registry import did_you_mean as _did_you_mean
 from repro.core.simulator import (COST_MODELS, CostModel,
                                   memory_saving_fraction, quartile_latencies)
+from repro.core.trace_stream import NON_SEMANTIC_TRACE_KWARGS, TraceStream
 from repro.core.traces import TRACE_GENERATORS, Trace
 
 #: Version of the :class:`Scenario` JSON schema this build reads and writes.
@@ -458,7 +459,7 @@ class RunOverrides:
     configured ``FleetConfig``). Any field left ``None`` is built from the
     scenario spec as usual.
     """
-    traces: Optional[List[Trace]] = None
+    traces: Optional[Union[List[Trace], TraceStream]] = None
     cost: Optional[CostModel] = None
     page_cost: Optional[PageCostModel] = None
     keep_alive: Optional[KeepAlivePolicy] = None   # single engine only
@@ -546,6 +547,19 @@ def run(scenario: Scenario, *, smoke: bool = False,
 
     traces = (ov.traces if ov.traces is not None
               else TRACE_GENERATORS.build(scn.traces.name, **scn.traces.kwargs))
+    if isinstance(traces, TraceStream):
+        # chunked execution: the fleet event engine consumes the stream
+        # natively (bit-identical to the materialized run — docs/TRACES.md);
+        # fleet_vec falls back to it via fast_path_reason. The single engine
+        # has no chunked path, so it materializes.
+        if scn.engine == "single":
+            traces = traces.materialize()
+        elif scn.disruption is not None:
+            raise ValueError(
+                "disruption schedules are built against the trace horizon, "
+                "which a stream only knows after its last chunk; set "
+                "traces.kwargs.stream=false to combine disruption with "
+                "this workload")
     cost = (ov.cost if ov.cost is not None
             else COST_MODELS.build(scn.cost.name, **scn.cost.kwargs))
     page = ov.page_cost
@@ -621,4 +635,6 @@ def run(scenario: Scenario, *, smoke: bool = False,
         summary["dependency_loading_speedup"] = (
             page.dependency_loading_speedup())
     return Result(scenario=scn.to_dict(), engine=scn.engine,
-                  summary=summary, raw=raw, traces=traces)
+                  summary=summary, raw=raw,
+                  traces=(traces.meta_traces()
+                          if isinstance(traces, TraceStream) else traces))

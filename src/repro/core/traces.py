@@ -15,7 +15,6 @@ A loader for the real Azure CSV schema is included for environments that have it
 """
 from __future__ import annotations
 
-import csv
 import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
@@ -200,29 +199,10 @@ def quartile_groups(traces: List[Trace]) -> dict:
     return groups
 
 
-@TRACE_GENERATORS.register("azure_csv")
-def load_azure_csv(path: str, n_functions: int, horizon_min: float,
-                   seed: int = 0) -> List[Trace]:
-    """Loader for the Azure Functions trace schema (per-minute counts per function).
-
-    Expects rows of per-minute invocation counts; converts counts to arrival times by
-    uniform placement within each minute."""
-    rng = np.random.default_rng(seed)
-    traces: List[Trace] = []
-    with open(path) as f:
-        reader = csv.reader(f)
-        header = next(reader)
-        count_cols = [i for i, h in enumerate(header) if h.strip().isdigit()]
-        for fi, row in enumerate(reader):
-            if fi >= n_functions:
-                break
-            counts = np.array([int(row[i] or 0) for i in count_cols], np.int64)
-            counts = counts[: int(horizon_min)]
-            arrivals = []
-            for minute, c in enumerate(counts):
-                if c:
-                    arrivals.extend(minute + rng.uniform(0, 1, size=c))
-            arr = np.sort(np.array(arrivals), kind="stable")
-            rate = float(counts.sum() / max(len(counts), 1))
-            traces.append(Trace(fi, rate, arr))
-    return traces
+# The Azure CSV reader and the streaming/adversarial generators (azure_csv,
+# diurnal, bursts, tenant_mix, rollout) live in core/trace_stream.py and
+# self-register into TRACE_GENERATORS when that module loads; this bottom
+# import makes `import repro.core.traces` alone populate the full registry.
+# (trace_stream imports this module's names, all defined above, so the
+# circular import is resolved by the time registration runs.)
+from repro.core import trace_stream as _trace_stream  # noqa: E402,F401

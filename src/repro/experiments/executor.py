@@ -35,7 +35,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.scenario import Scenario, run, sweep, validate_result
 from repro.experiments.store import (ResultStore, StoreError, canonical_json,
-                                     spec_key)
+                                     normalize_spec, spec_key)
 
 
 @dataclass
@@ -65,8 +65,11 @@ class SweepReport:
 def point_seed(spec: Mapping[str, Any]) -> int:
     """Deterministic per-point seed: a stable 31-bit hash of the spec with
     any existing ``traces.kwargs.seed`` removed (so the derived seed is a
-    function of *what* the point simulates, not of a previous seed)."""
-    d = json.loads(canonical_json(spec))
+    function of *what* the point simulates, not of a previous seed).
+    Non-semantic trace kwargs (``stream``, ``chunk_min``) are dropped too
+    (:func:`repro.experiments.store.normalize_spec`): streamed and in-memory
+    runs of one spec must draw the same derived seed."""
+    d = normalize_spec(spec)
     d.get("traces", {}).get("kwargs", {}).pop("seed", None)
     digest = hashlib.sha256(canonical_json(d).encode()).digest()
     return int.from_bytes(digest[:4], "big") & 0x7FFFFFFF

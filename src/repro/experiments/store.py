@@ -34,6 +34,7 @@ import os
 from typing import Any, Dict, Iterator, List, Mapping, Optional
 
 from repro.core.scenario import RESULT_SCHEMA_VERSION
+from repro.core.trace_stream import NON_SEMANTIC_TRACE_KWARGS
 
 #: Version of the store file layout this build reads and writes.
 STORE_SCHEMA_VERSION = 1
@@ -57,13 +58,29 @@ def canonical_json(obj: Any) -> str:
     return json.dumps(obj, sort_keys=True, separators=(",", ":"))
 
 
+def normalize_spec(spec: Mapping[str, Any]) -> Dict[str, Any]:
+    """Deep copy of ``spec`` with non-semantic trace kwargs dropped
+    (``traces.kwargs.stream`` / ``chunk_min`` — see
+    :data:`repro.core.trace_stream.NON_SEMANTIC_TRACE_KWARGS`). Streamed and
+    in-memory execution of one spec are bit-identical by contract, so they
+    must share a store key and a derived seed."""
+    d = json.loads(canonical_json(spec))
+    kwargs = d.get("traces", {}).get("kwargs", {})
+    for k in NON_SEMANTIC_TRACE_KWARGS:
+        kwargs.pop(k, None)
+    return d
+
+
 def spec_key(spec: Mapping[str, Any]) -> str:
     """Content hash (sha256 hex) of a resolved scenario spec dict.
 
     This is the store key: two grid points collide iff their fully resolved
-    specs are identical, in which case their results are identical too (the
-    engines are deterministic functions of the spec)."""
-    return hashlib.sha256(canonical_json(spec).encode()).hexdigest()
+    specs are identical *up to non-semantic trace kwargs*
+    (:func:`normalize_spec`), in which case their results are identical too
+    (the engines are deterministic functions of the spec, and the streaming
+    contract makes ``stream``/``chunk_min`` invisible in the results)."""
+    return hashlib.sha256(
+        canonical_json(normalize_spec(spec)).encode()).hexdigest()
 
 
 class ResultStore:

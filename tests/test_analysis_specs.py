@@ -104,6 +104,64 @@ def test_stale_spec_fixture_file_roundtrip(tmp_path):
                             "unknown-kwarg"]
 
 
+def test_adversarial_generators_validate_clean():
+    """The four adversarial generators' full kwarg surfaces cross-validate
+    against the live registry signatures."""
+    cases = {
+        "diurnal": {"n_functions": 8, "horizon_min": 120.0, "seed": 1,
+                    "amplitude": 0.5, "peak_min": 840.0, "stream": True,
+                    "block_min": 60.0, "chunk_min": 120.0},
+        "bursts": {"n_functions": 8, "horizon_min": 120.0, "seed": 1,
+                   "n_bursts": 2, "burst_multiplier": 10.0, "retries": 1},
+        "tenant_mix": {"n_tenants": 2, "fns_per_tenant": 4,
+                       "horizon_min": 120.0, "seed": 1,
+                       "noisy_multiplier": 2.0},
+        "rollout": {"n_functions": 6, "horizon_min": 240.0, "seed": 1,
+                    "n_rollouts": 1, "rollout_stagger_min": 30.0},
+    }
+    for name, kwargs in cases.items():
+        spec = valid_spec()
+        spec["traces"] = {"name": name, "kwargs": kwargs}
+        assert specs.check_spec(spec, "x.json") == [], name
+
+
+def test_adversarial_generator_stale_kwarg_caught():
+    spec = valid_spec()
+    spec["traces"] = {"name": "diurnal",
+                      "kwargs": {"n_functions": 8, "horizon_min": 120.0,
+                                 "amplitud": 0.5}}          # typo'd kwarg
+    found = specs.check_spec(spec, "x.json")
+    assert rules(found) == ["unknown-kwarg"]
+    assert "amplitude" in found[0].message       # did-you-mean
+
+
+def test_stream_with_disruption_flagged():
+    spec = valid_spec()
+    spec["traces"]["kwargs"]["stream"] = True
+    spec["traces"]["name"] = "diurnal"
+    spec["disruption"] = {"name": "churn", "kwargs": {}}
+    found = specs.check_spec(spec, "x.json")
+    assert "stream-with-disruption" in rules(found)
+
+
+def test_stream_with_single_engine_flagged():
+    spec = valid_spec()
+    spec["engine"] = "single"
+    del spec["placement"]                        # single engine: no placement
+    spec["traces"]["kwargs"]["stream"] = True
+    spec["traces"]["name"] = "bursts"
+    found = specs.check_spec(spec, "x.json")
+    assert "stream-with-single-engine" in rules(found)
+
+
+def test_stream_false_not_flagged():
+    spec = valid_spec()
+    spec["traces"]["name"] = "diurnal"
+    spec["traces"]["kwargs"]["stream"] = False
+    spec["disruption"] = {"name": "churn", "kwargs": {}}
+    assert specs.check_spec(spec, "x.json") == []
+
+
 def test_all_checked_in_scenarios_clean():
     paths = sorted(glob.glob(
         os.path.join(REPO_ROOT, "benchmarks", "scenarios", "*.json")))

@@ -7,7 +7,7 @@ import math
 import pytest
 
 from tools.ci import check_bench, check_doc_links, check_latency, \
-    check_page_model
+    check_page_model, check_trend
 
 
 # ------------------------------------------------------------ check_bench
@@ -82,6 +82,130 @@ def test_check_bench_rejects_unknown_schema(tmp_path):
     data["bench_schema_version"] = 99
     with pytest.raises(AssertionError, match="schema"):
         check_bench.main(write(tmp_path, data))
+
+
+# ------------------------------------------------------------ check_trend
+
+def trend_artifact(**overrides):
+    """A self-consistent BENCH_smoke.json; overrides patch cells/headline."""
+    data = {
+        "bench_schema_version": 1,
+        "smoke": True,
+        "cells": {"fleet": {"ok": True, "wall_clock_s": 30.0},
+                  "sharing": {"ok": True, "wall_clock_s": 4.0}},
+        "headline": {
+            "memory_saving_vs_prebaking": 0.88,
+            "dependency_loading_speedup": 2.7,
+            "azure_scale_n_invocations": 1_200_000,
+            "azure_scale_wall_clock_s": 12.0,
+            "oracle_gap": {"min_total_gap_s": 1.5, "min_p99_gap_s": 0.01,
+                           "n_cells": 67},
+        },
+    }
+    for key, value in overrides.items():
+        node = data
+        *parents, leaf = key.split(".")
+        for p in parents:
+            node = node[p]
+        node[leaf] = value
+    return data
+
+
+def test_check_trend_passes_on_identical(tmp_path):
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(tmp_path, trend_artifact(), "new.json")
+    assert check_trend.main(new, prev) == 0
+
+
+def test_check_trend_passes_within_slack(tmp_path):
+    # +20% relative is inside the 25% + 2s budget
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(tmp_path, trend_artifact(**{"cells.fleet.wall_clock_s": 36.0}),
+                "new.json")
+    assert check_trend.main(new, prev) == 0
+
+
+def test_check_trend_fails_on_30pct_wall_clock_regression(tmp_path):
+    # the acceptance case: a synthetic 30% regression on a large cell
+    # (outside the 25% + 2s budget) must fail the gate
+    prev = write(tmp_path,
+                 trend_artifact(**{"cells.fleet.wall_clock_s": 100.0}),
+                 "prev.json")
+    new = write(tmp_path,
+                trend_artifact(**{"cells.fleet.wall_clock_s": 130.0}),
+                "new.json")
+    with pytest.raises(AssertionError, match="wall-clock regression"):
+        check_trend.main(new, prev)
+
+
+def test_check_trend_abs_slack_absorbs_small_cells(tmp_path):
+    # 4.0s -> 6.9s is +72% relative but inside 4*1.25 + 2 = 7s
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(tmp_path,
+                trend_artifact(**{"cells.sharing.wall_clock_s": 6.9}),
+                "new.json")
+    assert check_trend.main(new, prev) == 0
+
+
+def test_check_trend_fails_on_headline_drift(tmp_path):
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(
+        tmp_path,
+        trend_artifact(**{"headline.memory_saving_vs_prebaking": 0.879}),
+        "new.json")
+    with pytest.raises(AssertionError, match="deterministic headline drift"):
+        check_trend.main(new, prev)
+
+
+def test_check_trend_fails_on_missing_headline_metric(tmp_path):
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    data = trend_artifact()
+    del data["headline"]["dependency_loading_speedup"]
+    new = write(tmp_path, data, "new.json")
+    with pytest.raises(AssertionError, match="disappeared"):
+        check_trend.main(new, prev)
+
+
+def test_check_trend_fails_on_shrinking_oracle_coverage(tmp_path):
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(tmp_path,
+                trend_artifact(**{"headline.oracle_gap.n_cells": 12}),
+                "new.json")
+    with pytest.raises(AssertionError, match="coverage shrank"):
+        check_trend.main(new, prev)
+
+
+def test_check_trend_new_and_removed_cells_pass(tmp_path):
+    prev_data = trend_artifact()
+    prev_data["cells"]["legacy"] = {"ok": True, "wall_clock_s": 9.0}
+    prev = write(tmp_path, prev_data, "prev.json")
+    new_data = trend_artifact()
+    new_data["cells"]["brand_new"] = {"ok": True, "wall_clock_s": 50.0}
+    new = write(tmp_path, new_data, "new.json")
+    assert check_trend.main(new, prev) == 0
+
+
+def test_check_trend_passes_without_previous_artifact(tmp_path):
+    new = write(tmp_path, trend_artifact(), "new.json")
+    assert check_trend.main(new, str(tmp_path / "nope.json")) == 0
+
+
+def test_check_trend_writes_job_summary(tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    new = write(tmp_path, trend_artifact(), "new.json")
+    assert check_trend.main(new, prev) == 0
+    text = summary.read_text()
+    assert "## Bench trend" in text and "cells.fleet" in text
+
+
+def test_check_trend_rejects_unknown_schema(tmp_path):
+    data = trend_artifact()
+    data["bench_schema_version"] = 99
+    prev = write(tmp_path, trend_artifact(), "prev.json")
+    with pytest.raises(AssertionError, match="schema"):
+        check_trend.main(write(tmp_path, data, "new.json"), prev)
 
 
 # ---------------------------------------------------------- check_latency

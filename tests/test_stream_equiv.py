@@ -1,0 +1,231 @@
+"""Streamed-execution differential suite: running the event engine over
+``TraceStream.chunks()`` must be BIT-identical to running it over the same
+trace fully materialized — same sha256 over the per-request sample arrays,
+same counters, same projections (docs/TRACES.md, "The streaming contract").
+Covers:
+
+  * every checked-in fleet scenario spec, wrapped in ``ListTraceStream`` at
+    several chunk sizes (including degenerate 1-arrival and whole-trace
+    chunks);
+  * the four adversarial generators plus the Azure CSV reader executed
+    natively (``stream=true`` vs ``stream=false`` through the scenario
+    layer), with ``chunk_min`` varied at fixed ``block_min``;
+  * a seeded randomized chunk-size fuzz sweep (reduced iterations under
+    ``REPRO_SMOKE=1``);
+  * the vectorized engine's stream fallback (``fast_path_reason``) and the
+    oracle's chunk-wise accumulation (``hindsight_floor``);
+  * the scenario/store plumbing: ``stream``/``chunk_min`` are non-semantic
+    for ``spec_key``/``point_seed``, and stream+disruption is rejected.
+"""
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetConfig, _simulate_fleet_impl
+from repro.core.fleet_vec import fast_path_reason, simulate_fleet_vec
+from repro.core.oracle import hindsight_floor
+from repro.core.scenario import RunOverrides, Scenario, run
+from repro.core.simulator import CostModel
+from repro.core.trace_stream import ListTraceStream
+from repro.core.traces import TRACE_GENERATORS, generate_fleet_traces
+from repro.experiments.executor import point_seed
+from repro.experiments.store import spec_key
+
+from tests.test_fleet_equiv import _TIER1_TRIMS, _sha, assert_equiv
+
+SCENARIOS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                             "scenarios")
+CM = CostModel.paper_table2()
+
+#: Reduced fuzz budget under the CI smoke job; tier-1 runs the full sweep.
+N_FUZZ = 10 if os.environ.get("REPRO_SMOKE") == "1" else 32
+
+#: Specs whose trace generator takes the ``stream`` kwarg, i.e. can execute
+#: natively chunked end-to-end through the scenario layer.
+STREAMABLE_GENERATORS = ("azure_csv", "diurnal", "bursts", "tenant_mix",
+                         "rollout")
+
+
+def _fleet_spec_paths():
+    out = []
+    for path in sorted(glob.glob(os.path.join(SCENARIOS_DIR, "*.json"))):
+        scn = Scenario.from_file(path)
+        if scn.engine in ("fleet", "fleet_vec"):
+            out.append(os.path.splitext(os.path.basename(path))[0])
+    return out
+
+
+def _spec(name):
+    return Scenario.from_file(os.path.join(SCENARIOS_DIR, f"{name}.json"))
+
+
+def _smoke_scaled(name):
+    scn = _spec(name).smoke_scaled()
+    return scn.with_overrides(dict(_TIER1_TRIMS.get(name, {})))
+
+
+# ---------------------------------------------------------------------------------
+# Every checked-in fleet spec: materialized vs ListTraceStream-wrapped
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _fleet_spec_paths())
+def test_checked_in_specs_stream_bit_identical(name):
+    """The adapter half of the contract: wrapping any in-memory trace list in
+    count-sliced chunks (which may split equal-timestamp runs across chunk
+    boundaries!) must not change a single output byte — through the full
+    scenario layer, so each spec's own page model / placement / prewarm is
+    exercised."""
+    overrides = {"engine": "fleet"}
+    if _spec(name).traces.name in STREAMABLE_GENERATORS:
+        overrides["traces.kwargs.stream"] = False
+    if _spec(name).disruption is not None:
+        # stream + disruption is rejected by design (see
+        # test_stream_with_disruption_rejected); drop the component so the
+        # chunking invariance of the rest of the spec is still covered
+        overrides["disruption"] = None
+    scn = _smoke_scaled(name).with_overrides(overrides)
+    traces = TRACE_GENERATORS.build(scn.traces.name, **scn.traces.kwargs)
+    if hasattr(traces, "materialize"):
+        traces = traces.materialize()
+    ref = run(scn, overrides=RunOverrides(traces=traces))
+    n = sum(len(t.arrivals_min) for t in traces)
+    for chunk_size in (1, 7, 1024, max(n, 1)):
+        st = ListTraceStream(traces, chunk_size=chunk_size)
+        got = run(scn, overrides=RunOverrides(traces=st))
+        for method in scn.methods:
+            assert_equiv(ref.raw[method], got.raw[method],
+                         label=f"{name}/{method}/chunk={chunk_size}")
+
+
+# ---------------------------------------------------------------------------------
+# Native streams through the scenario layer: stream=true vs stream=false
+# ---------------------------------------------------------------------------------
+
+def _streamable_spec_names():
+    return [n for n in _fleet_spec_paths()
+            if _spec(n).traces.name in STREAMABLE_GENERATORS]
+
+
+@pytest.mark.parametrize("name", _streamable_spec_names())
+def test_native_stream_specs_end_to_end(name):
+    """The generator half of the contract, through the full scenario layer:
+    the checked-in spec executed chunked vs materialized, all methods."""
+    scn = _smoke_scaled(name)
+    mem = run(scn.with_overrides({"traces.kwargs.stream": False}))
+    st = run(scn.with_overrides({"traces.kwargs.stream": True}))
+    assert set(mem.raw) == set(st.raw)
+    for method in mem.raw:
+        assert_equiv(mem.raw[method], st.raw[method],
+                     label=f"{name}/{method}/native-stream")
+    assert mem.summary == st.summary
+
+
+@pytest.mark.parametrize("name", _streamable_spec_names())
+def test_chunk_min_invariant_end_to_end(name):
+    """chunk_min is non-semantic: regrouping blocks into different chunk
+    sizes must not change a byte (block_min stays fixed — it IS the RNG
+    key)."""
+    scn = _smoke_scaled(name)
+    base = run(scn.with_overrides({"traces.kwargs.stream": True}))
+    block = scn.traces.kwargs.get("block_min", 1440.0)
+    for chunk_min in (block, 4 * block, 1e9):
+        got = run(scn.with_overrides({"traces.kwargs.stream": True,
+                                      "traces.kwargs.chunk_min": chunk_min}))
+        for method in base.raw:
+            assert_equiv(base.raw[method], got.raw[method],
+                         label=f"{name}/{method}/chunk_min={chunk_min}")
+
+
+# ---------------------------------------------------------------------------------
+# Randomized chunk-size fuzz
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", range(N_FUZZ))
+def test_fuzz_chunk_sizes(case):
+    rng = np.random.default_rng(7000 + case)
+    traces = generate_fleet_traces(
+        n_functions=int(rng.integers(2, 14)),
+        horizon_min=float(rng.integers(100, 800)),
+        seed=int(rng.integers(0, 1 << 16)),
+        n_images=int(rng.integers(1, 4)),
+        rate_model="zipf",
+        total_rate_per_min=float(rng.uniform(0.5, 4.0)),
+    )
+    method = ("warmswap", "baseline", "prebaking")[case % 3]
+    kwargs = dict(n_workers=int(rng.integers(1, 5)),
+                  keep_alive_min=float(rng.integers(1, 30)))
+    ref = _simulate_fleet_impl(traces, method, CM, FleetConfig(**kwargs))
+    chunk_size = int(rng.integers(1, 500))
+    st = ListTraceStream(traces, chunk_size=chunk_size)
+    got = _simulate_fleet_impl(st, method, CM, FleetConfig(**kwargs))
+    assert_equiv(ref, got, label=f"fuzz[{case}]/chunk={chunk_size}")
+
+
+# ---------------------------------------------------------------------------------
+# Vectorized engine: streams always fall back, bit-identically
+# ---------------------------------------------------------------------------------
+
+def test_fleet_vec_falls_back_on_streams():
+    traces = generate_fleet_traces(n_functions=6, horizon_min=300.0, seed=3)
+    st = ListTraceStream(traces, chunk_size=64)
+    reason = fast_path_reason(st, "warmswap", CM)
+    assert reason is not None and "stream" in reason
+    vec = simulate_fleet_vec(st, "warmswap", CM, FleetConfig(n_workers=2))
+    ref = _simulate_fleet_impl(traces, "warmswap", CM,
+                               FleetConfig(n_workers=2))
+    assert_equiv(ref, vec, label="vec-stream-fallback")
+
+
+# ---------------------------------------------------------------------------------
+# Oracle: chunk-wise accumulation matches the in-memory floor
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", ("diurnal", "bursts"))
+def test_hindsight_floor_streams(gen):
+    # block_min is the RNG key, so it must match on both sides; only
+    # stream/chunk_min may differ
+    kw = dict(n_functions=16, horizon_min=480.0, seed=9, block_min=60.0)
+    mem = hindsight_floor(TRACE_GENERATORS.build(gen, stream=False, **kw),
+                          "warmswap", CM)
+    st = hindsight_floor(
+        TRACE_GENERATORS.build(gen, stream=True, chunk_min=60.0, **kw),
+        "warmswap", CM)
+    assert _sha(mem.latency_samples_s) == _sha(st.latency_samples_s)
+    assert (mem.n_invocations, mem.n_cold, mem.n_warm) == \
+        (st.n_invocations, st.n_cold, st.n_warm)
+
+
+# ---------------------------------------------------------------------------------
+# Scenario / store plumbing
+# ---------------------------------------------------------------------------------
+
+def test_stream_with_disruption_rejected():
+    scn = _smoke_scaled("adversarial_diurnal").with_overrides({
+        "traces.kwargs.stream": True,
+        "disruption": {"name": "churn", "kwargs": {}},
+    })
+    with pytest.raises(ValueError, match="disruption"):
+        run(scn)
+
+
+def test_stream_and_chunk_min_are_non_semantic_for_the_store():
+    spec = _spec("adversarial_bursts").to_dict()
+    streamed = run(Scenario.from_dict(spec).smoke_scaled().with_overrides(
+        {"traces.kwargs.stream": True}))
+    assert streamed.raw  # the spec itself runs streamed
+    variants = [dict(spec) for _ in range(3)]
+    variants[1] = Scenario.from_dict(spec).with_overrides(
+        {"traces.kwargs.stream": True}).to_dict()
+    variants[2] = Scenario.from_dict(spec).with_overrides(
+        {"traces.kwargs.stream": True,
+         "traces.kwargs.chunk_min": 360.0}).to_dict()
+    keys = {spec_key(v) for v in variants}
+    seeds = {point_seed(v) for v in variants}
+    assert len(keys) == 1, "stream/chunk_min must not change spec_key"
+    assert len(seeds) == 1, "stream/chunk_min must not change point_seed"
+    # block_min IS semantic (it keys the per-block RNG)
+    semantic = Scenario.from_dict(spec).with_overrides(
+        {"traces.kwargs.block_min": 60.0}).to_dict()
+    assert spec_key(semantic) not in keys

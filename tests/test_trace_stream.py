@@ -1,0 +1,312 @@
+"""Unit tests for core/trace_stream.py: the hardened Azure CSV reader
+(gzip auto-detection, malformed rows raise with line numbers), the four
+adversarial generators, and the streaming invariants (chunk-size invariance,
+re-iterability, residency stats). The engine-level bit-identity contract is
+covered separately by tests/test_stream_equiv.py."""
+import gzip
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.trace_stream import (DEFAULT_BLOCK_MIN,
+                                     NON_SEMANTIC_TRACE_KWARGS,
+                                     AzureCsvStream, CsvSchemaError,
+                                     ListTraceStream, TraceStream, block_rng,
+                                     ensure_trace_list)
+from repro.core.traces import TRACE_GENERATORS, Trace, generate_fleet_traces
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "data",
+                       "azure_sample.csv.gz")
+
+GENERATOR_KWARGS = {
+    "diurnal": dict(n_functions=20, horizon_min=360.0, seed=5, n_images=4),
+    "bursts": dict(n_functions=16, horizon_min=240.0, seed=6, n_images=3),
+    "tenant_mix": dict(n_tenants=3, fns_per_tenant=6, horizon_min=240.0,
+                       seed=7),
+    "rollout": dict(n_functions=12, horizon_min=480.0, seed=8, n_images=2),
+}
+
+
+def _arr_equal(ta, tb):
+    assert len(ta) == len(tb)
+    for a, b in zip(ta, tb):
+        assert a.fn_index == b.fn_index and a.image_id == b.image_id
+        assert np.array_equal(a.arrivals_min, b.arrivals_min)
+        assert a.rate_per_min == b.rate_per_min
+
+
+# --------------------------------------------------------------- registry
+
+def test_all_stream_generators_registered():
+    for name in ("azure_csv", "diurnal", "bursts", "tenant_mix", "rollout"):
+        assert name in TRACE_GENERATORS, name
+
+
+# -------------------------------------------------------------- block_rng
+
+def test_block_rng_deterministic_and_keyed():
+    a = block_rng(3, 2, 7).random(4)
+    b = block_rng(3, 2, 7).random(4)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, block_rng(3, 2, 8).random(4))
+    assert not np.array_equal(a, block_rng(3, 1, 7).random(4))
+
+
+def test_block_rng_rejects_negative_seed():
+    with pytest.raises(ValueError, match=">= 0"):
+        block_rng(-1, 2)
+
+
+def test_stream_base_validation():
+    class _S(TraceStream):
+        pass
+    with pytest.raises(ValueError, match="n_functions"):
+        _S(n_functions=0, horizon_min=10.0)
+    with pytest.raises(ValueError, match="horizon_min"):
+        _S(n_functions=1, horizon_min=0.0)
+    with pytest.raises(ValueError, match="chunk_min"):
+        _S(n_functions=1, horizon_min=10.0, chunk_min=0.0)
+
+
+# ----------------------------------------------------------- CSV fixture
+
+def test_csv_fixture_parses_with_shared_images():
+    st = AzureCsvStream(FIXTURE, n_functions=64, horizon_min=1440.0)
+    try:
+        meta = st.meta_traces()
+        assert st.n_functions == 64
+        assert st.total_invocations > 0
+        assert len({t.image_id for t in meta}) > 1   # HashApp sharing
+        assert all(t.rate_per_min >= 0 for t in meta)
+        assert all(len(t.arrivals_min) == 0 for t in meta)
+    finally:
+        st.close()
+
+
+def test_csv_gzip_and_plain_bit_identical(tmp_path):
+    plain = tmp_path / "t.csv"
+    with gzip.open(FIXTURE, "rb") as f:
+        plain.write_bytes(f.read())
+    a = AzureCsvStream(str(plain), n_functions=8, horizon_min=240.0, seed=1)
+    b = AzureCsvStream(FIXTURE, n_functions=8, horizon_min=240.0, seed=1)
+    try:
+        _arr_equal(a.materialize(), b.materialize())
+    finally:
+        a.close()
+        b.close()
+
+
+def test_csv_row_cap_and_horizon_trim():
+    st = AzureCsvStream(FIXTURE, n_functions=10, horizon_min=60.0)
+    try:
+        assert st.n_functions == 10
+        tr = st.materialize()
+        assert all((t.arrivals_min < 60.0).all() for t in tr)
+    finally:
+        st.close()
+
+
+def _write_csv(tmp_path, body, name="t.csv"):
+    p = tmp_path / name
+    p.write_text(body)
+    return str(p)
+
+
+def test_csv_malformed_rows_raise_with_line_numbers(tmp_path):
+    header = "HashApp,1,2,3\n"
+    cases = [
+        ("app0,1,2\n", "line 2: expected 4 columns, got 3"),
+        ("app0,1,oops,3\n", "line 2, column '2': invalid invocation"),
+        ("app0,1,-2,3\n", "line 2, column '2': negative invocation"),
+    ]
+    for body, fragment in cases:
+        path = _write_csv(tmp_path, header + body)
+        with pytest.raises(CsvSchemaError, match=fragment):
+            AzureCsvStream(path, n_functions=4, horizon_min=10.0)
+
+
+def test_csv_schema_errors(tmp_path):
+    with pytest.raises(CsvSchemaError, match="empty file"):
+        AzureCsvStream(_write_csv(tmp_path, ""), n_functions=1,
+                       horizon_min=10.0)
+    with pytest.raises(CsvSchemaError, match="no per-minute count columns"):
+        AzureCsvStream(_write_csv(tmp_path, "HashApp,foo\napp0,1\n"),
+                       n_functions=1, horizon_min=10.0)
+    with pytest.raises(CsvSchemaError, match="duplicate minute"):
+        AzureCsvStream(_write_csv(tmp_path, "1,2,2\n0,0,0\n"),
+                       n_functions=1, horizon_min=10.0)
+
+
+def test_csv_error_names_file_and_line(tmp_path):
+    path = _write_csv(tmp_path, "1,2\n3,4\nbad,5\n")
+    with pytest.raises(CsvSchemaError) as exc:
+        AzureCsvStream(path, n_functions=4, horizon_min=10.0)
+    assert path in str(exc.value) and "line 3" in str(exc.value)
+
+
+def test_csv_empty_cells_are_zero(tmp_path):
+    path = _write_csv(tmp_path, "1,2,3\n2,,1\n")
+    st = AzureCsvStream(path, n_functions=1, horizon_min=10.0)
+    try:
+        tr = st.materialize()
+        assert len(tr) == 1 and len(tr[0].arrivals_min) == 3
+        assert st.total_invocations == 3
+    finally:
+        st.close()
+
+
+def test_csv_close_removes_spill_dir(tmp_path):
+    path = _write_csv(tmp_path, "1,2\n1,1\n")
+    st = AzureCsvStream(path, n_functions=1, horizon_min=10.0)
+    spill = st._spill_dir
+    assert os.path.isdir(spill)
+    st.close()
+    assert not os.path.exists(spill)
+
+
+# -------------------------------------------- streaming invariants
+
+@pytest.mark.parametrize("name", sorted(GENERATOR_KWARGS))
+def test_chunk_min_is_non_semantic(name):
+    """Chunk grouping must never change which arrivals exist — only how many
+    are resident at once (the chunk-size-invariance half of the contract)."""
+    kw = GENERATOR_KWARGS[name]
+    base = TRACE_GENERATORS.build(name, stream=False, **kw)
+    for chunk_min in (30.0, 120.0, 1e9):
+        st = TRACE_GENERATORS.build(name, stream=True, chunk_min=chunk_min,
+                                    block_min=30.0, **kw)
+        st2 = TRACE_GENERATORS.build(name, stream=True, block_min=30.0, **kw)
+        _arr_equal(st.materialize(), st2.materialize())
+    # and stream=False vs stream=True agree at the default chunking
+    st = TRACE_GENERATORS.build(name, stream=True, **kw)
+    _arr_equal(base, st.materialize())
+
+
+def test_csv_chunk_min_is_non_semantic():
+    kw = dict(n_functions=12, horizon_min=480.0, seed=2, block_min=60.0)
+    base = AzureCsvStream(FIXTURE, chunk_min=60.0, **kw)
+    other = AzureCsvStream(FIXTURE, chunk_min=240.0, **kw)
+    try:
+        _arr_equal(base.materialize(), other.materialize())
+        n_small = sum(1 for _ in base.chunks())
+        n_big = sum(1 for _ in other.chunks())
+        assert n_small > n_big >= 1
+    finally:
+        base.close()
+        other.close()
+
+
+@pytest.mark.parametrize("name", sorted(GENERATOR_KWARGS))
+def test_chunks_match_materialize_and_are_reiterable(name):
+    st = TRACE_GENERATORS.build(name, stream=True, block_min=60.0,
+                                chunk_min=60.0, **GENERATOR_KWARGS[name])
+    total = sum(len(t.arrivals_min) for t in st.materialize())
+    first = [c.t_min.copy() for c in st.chunks()]
+    second = [c.t_min.copy() for c in st.chunks()]        # fresh iterator
+    assert sum(len(t) for t in first) == total
+    assert all(np.array_equal(a, b) for a, b in zip(first, second))
+    assert st.stats.n_arrivals == total
+    assert st.stats.n_chunks == len(first)
+    assert 0 < st.stats.peak_resident_arrivals < max(total, 2)
+
+
+def test_chunks_sorted_and_windowed():
+    st = TRACE_GENERATORS.build("diurnal", stream=True, block_min=30.0,
+                                chunk_min=30.0,
+                                **GENERATOR_KWARGS["diurnal"])
+    prev_end = 0.0
+    for c in st.chunks():
+        assert (np.diff(c.t_min) >= 0).all()
+        assert c.t_min[0] >= c.start_min >= prev_end - 1e-9
+        assert c.t_min[-1] <= c.end_min
+        prev_end = c.start_min
+
+
+@pytest.mark.parametrize("name", sorted(GENERATOR_KWARGS))
+def test_generator_determinism(name):
+    kw = GENERATOR_KWARGS[name]
+    a = TRACE_GENERATORS.build(name, stream=False, **kw)
+    b = TRACE_GENERATORS.build(name, stream=False, **kw)
+    _arr_equal(a, b)
+    kw2 = dict(kw, seed=kw["seed"] + 100)
+    c = TRACE_GENERATORS.build(name, stream=False, **kw2)
+    assert any(not np.array_equal(x.arrivals_min, y.arrivals_min)
+               for x, y in zip(a, c))
+
+
+def test_non_semantic_kwargs_frozen():
+    assert NON_SEMANTIC_TRACE_KWARGS == {"stream", "chunk_min"}
+    assert "block_min" not in NON_SEMANTIC_TRACE_KWARGS   # block_min IS RNG
+
+
+def test_ensure_trace_list_accepts_both():
+    tr = generate_fleet_traces(n_functions=4, horizon_min=100.0, seed=1)
+    assert ensure_trace_list(tr) is tr
+    st = ListTraceStream(tr, chunk_size=7)
+    _arr_equal(ensure_trace_list(st), tr)
+
+
+# ----------------------------------------------- generator-specific shape
+
+def test_diurnal_rates_modulate():
+    kw = dict(GENERATOR_KWARGS["diurnal"], horizon_min=1440.0)
+    st = TRACE_GENERATORS.build("diurnal", stream=True, amplitude=0.95,
+                                peak_min=840.0, phase_jitter_min=0.0, **kw)
+    tr = st.materialize()
+    # day/night split: the 6h around the peak must out-arrive the 6h trough
+    t = np.concatenate([x.arrivals_min for x in tr]) % 1440.0
+    peak = ((t > 11 * 60) & (t < 17 * 60)).sum()
+    trough = ((t > 23 * 60) | (t < 5 * 60)).sum()
+    assert peak > 2 * max(trough, 1)
+
+
+def test_bursts_concentrate_arrivals():
+    kw = dict(GENERATOR_KWARGS["bursts"], burst_multiplier=80.0,
+              n_bursts=3, burst_duration_min=5.0)
+    tr = TRACE_GENERATORS.build("bursts", stream=False, **kw)
+    base = TRACE_GENERATORS.build(
+        "bursts", stream=False, **dict(kw, burst_multiplier=1.0))
+    assert sum(len(t.arrivals_min) for t in tr) > \
+        1.5 * sum(len(t.arrivals_min) for t in base)
+
+
+def test_tenant_mix_partitions_images():
+    st = TRACE_GENERATORS.build("tenant_mix", stream=True,
+                                **GENERATOR_KWARGS["tenant_mix"])
+    meta = st.meta_traces()
+    by_tenant = {}
+    for t in meta:
+        tn = st.tenant_of_fn[t.fn_index]
+        by_tenant.setdefault(int(tn), set()).add(t.image_id)
+    images = list(by_tenant.values())
+    for i, a in enumerate(images):
+        for b in images[i + 1:]:
+            assert not (a & b), "tenants must not share images"
+
+
+def test_rollout_introduces_versioned_images():
+    kw = GENERATOR_KWARGS["rollout"]
+    tr = TRACE_GENERATORS.build("rollout", stream=False, **kw)
+    images = {t.image_id for t in tr if len(t.arrivals_min)}
+    assert len(images) > kw["n_images"], \
+        "rollouts must route traffic to versioned images"
+    # later versions arrive strictly later on average
+    v0 = np.concatenate([t.arrivals_min for t in tr
+                         if t.image_id < kw["n_images"]])
+    v_last = np.concatenate([t.arrivals_min for t in tr
+                             if t.image_id >= kw["n_images"]])
+    assert v_last.mean() > v0.mean()
+
+
+def test_list_stream_counts_and_stats():
+    tr = generate_fleet_traces(n_functions=6, horizon_min=300.0, seed=4,
+                               n_images=2, rate_model="zipf",
+                               total_rate_per_min=4.0)
+    total = sum(len(t.arrivals_min) for t in tr)
+    st = ListTraceStream(tr, chunk_size=13)
+    seen = sum(len(c) for c in st.chunks())
+    assert seen == total == st.stats.n_arrivals
+    assert st.stats.peak_resident_arrivals <= 13
+    with pytest.raises(ValueError, match="chunk_size"):
+        ListTraceStream(tr, chunk_size=0)

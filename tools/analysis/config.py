@@ -57,6 +57,9 @@ SANCTIONED_ENVIRON: Set[Tuple[str, str]] = {
     ("benchmarks/common.py", "smoke_mode"),
     ("src/repro/core/fleet_vec.py", "_scan_enabled"),
     ("src/repro/core/sanitize.py", "sanitize_enabled"),
+    # CI output channel, not configuration: GITHUB_STEP_SUMMARY is where the
+    # trend gate mirrors its markdown table — it never influences results
+    ("tools/ci/check_trend.py", "_emit"),
 }
 
 #: Wall-clock readers that are fine anywhere: monotonic *interval* timers

@@ -104,6 +104,48 @@ def check_file(path: str) -> List[Finding]:
     return check_spec(data, rel)
 
 
+def _check_stream_misuse(data: Mapping[str, Any], rel: str) -> List[Finding]:
+    """Static rules for ``traces.kwargs.stream: true`` specs.
+
+    The runtime rejects (or silently papers over) these only when the spec
+    is *executed*; surfacing them at lint time keeps a stale checked-in spec
+    from passing the analysis job and then failing (or lying) in smoke:
+
+    * ``stream-with-disruption`` — disruption schedules are built against
+      the trace horizon, which a stream only knows after its last chunk;
+      ``scenario.run`` raises on this combination.
+    * ``stream-with-single-engine`` — the single-worker engine always
+      materializes streams, so the spec's out-of-core claim is false
+      advertising; set ``stream: false`` (bit-identical by contract).
+    """
+    findings: List[Finding] = []
+    traces = data.get("traces")
+    if not isinstance(traces, Mapping):
+        return findings
+    kwargs = traces.get("kwargs")
+    if not isinstance(kwargs, Mapping) or not kwargs.get("stream"):
+        return findings
+    if data.get("disruption") is not None:
+        findings.append(Finding(
+            CHECKER, "stream-with-disruption", rel, 1, 0,
+            "traces.kwargs.stream=true cannot be combined with a disruption "
+            "component: disruption schedules are built against the trace "
+            "horizon, which a stream only knows after its last chunk",
+            scope="traces", snippet="stream: true + disruption",
+            suggestion="set traces.kwargs.stream=false (bit-identical by "
+                       "contract) or drop the disruption component"))
+    if data.get("engine") == "single":
+        findings.append(Finding(
+            CHECKER, "stream-with-single-engine", rel, 1, 0,
+            "traces.kwargs.stream=true with engine 'single': the "
+            "single-worker engine materializes streams, so the spec gains "
+            "nothing and misstates its memory profile",
+            scope="traces", snippet="stream: true + engine: single",
+            suggestion="set traces.kwargs.stream=false, or use the fleet "
+                       "engine to consume chunks natively"))
+    return findings
+
+
 def check_spec(data: Mapping[str, Any], rel: str) -> List[Finding]:
     findings: List[Finding] = []
     registries = _registries()
@@ -176,6 +218,8 @@ def check_spec(data: Mapping[str, Any], rel: str) -> List[Finding]:
                     f"spec does not provide it", scope=f"{fld}.{name}",
                     snippet=f"{name}(...{pname}...)",
                     suggestion=f"add {pname!r} to the component's kwargs"))
+
+    findings.extend(_check_stream_misuse(data, rel))
 
     # cross-field/schema validation — only when the structured pass is clean,
     # so one root cause doesn't surface twice

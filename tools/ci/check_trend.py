@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Bench trend gate: the fresh ``BENCH_smoke.json`` vs the checked-in one.
+
+``check_bench.py`` holds the *absolute* paper bands; this gate holds the
+*trajectory* — each PR's smoke bench is compared against the artifact the
+repo shipped with, so a slow drift that never leaves a band still fails the
+moment it regresses a wall clock by more than the threshold:
+
+  * per-bench wall clocks (``cells.*.wall_clock_s``) and headline wall
+    clocks (``*_wall_clock_s``): fail when
+    ``new > prev * 1.25 + 2.0`` (25 % relative + 2 s absolute slack, so
+    sub-second cells don't flap on runner noise);
+  * deterministic headline metrics (savings, speedups, invocation counts):
+    the engines are deterministic functions of the specs, so any drift
+    beyond 1e-6 relative means the *simulation* changed, not the hardware —
+    that is a correctness failure, not noise;
+  * ``oracle_gap.n_cells`` must not shrink: dominance coverage only grows;
+  * cells/metrics added or removed are reported in the table, never failed
+    (new benches land with their first baseline).
+
+A markdown trend table goes to stdout and, when ``$GITHUB_STEP_SUMMARY`` is
+set, to the job summary. CI snapshots the checked-in artifact *before* the
+bench overwrites it:
+
+    cp results/BENCH_smoke.json /tmp/BENCH_prev.json
+    PYTHONPATH=src python -m benchmarks.run --smoke ...
+    python tools/ci/check_trend.py results/BENCH_smoke.json /tmp/BENCH_prev.json
+"""
+import json
+import math
+import os
+import sys
+
+WALL_REGRESSION_RATIO = 1.25     # >25 % wall-clock regression fails
+WALL_ABS_SLACK_S = 2.0           # plus 2 s absolute slack (runner noise)
+DETERMINISTIC_REL_TOL = 1e-6     # deterministic metrics must not drift
+
+#: Headline keys that are deterministic functions of the checked-in specs.
+DETERMINISTIC_KEYS = (
+    "memory_saving_vs_prebaking",
+    "sharing_memory_saving_vs_prebaking",
+    "dependency_loading_speedup",
+    "azure_scale_n_invocations",
+    "azure_scale_xl_n_invocations",
+    "stream_ingest_n_invocations",
+)
+
+
+def _load(path):
+    data = json.load(open(path))
+    assert data.get("bench_schema_version") == 1, \
+        f"unknown bench schema in {path}"
+    return data
+
+
+def _wall_clocks(data):
+    """name -> wall-clock seconds, cells and headline keys merged."""
+    out = {}
+    for name, cell in data.get("cells", {}).items():
+        w = cell.get("wall_clock_s")
+        if isinstance(w, (int, float)) and math.isfinite(w):
+            out[f"cells.{name}"] = float(w)
+    for key, v in data.get("headline", {}).items():
+        if key.endswith("_wall_clock_s") and isinstance(v, (int, float)) \
+                and math.isfinite(v):
+            out[f"headline.{key}"] = float(v)
+    return out
+
+
+def _drifted(new, prev):
+    denom = max(abs(prev), abs(new), 1e-12)
+    return abs(new - prev) / denom > DETERMINISTIC_REL_TOL
+
+
+def _emit(table_lines):
+    text = "\n".join(table_lines) + "\n"
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text)
+
+
+def main(new_path="results/BENCH_smoke.json", prev_path=None):
+    new = _load(new_path)
+    if prev_path is None or not os.path.exists(prev_path):
+        print(f"no previous artifact at {prev_path!r}: trend gate passes "
+              f"vacuously (seeding the trajectory)")
+        return 0
+    prev = _load(prev_path)
+
+    rows = ["## Bench trend", "",
+            "| metric | previous | current | Δ | verdict |",
+            "|---|---|---|---|---|"]
+    failures = []
+
+    new_walls, prev_walls = _wall_clocks(new), _wall_clocks(prev)
+    for name in sorted(set(new_walls) | set(prev_walls)):
+        if name not in new_walls:
+            rows.append(f"| {name} | {prev_walls[name]:.2f}s | — | — | "
+                        f"removed |")
+            continue
+        if name not in prev_walls:
+            rows.append(f"| {name} | — | {new_walls[name]:.2f}s | — | "
+                        f"new baseline |")
+            continue
+        p, n = prev_walls[name], new_walls[name]
+        budget = p * WALL_REGRESSION_RATIO + WALL_ABS_SLACK_S
+        delta = (n - p) / p if p else math.inf
+        ok = n <= budget
+        rows.append(f"| {name} | {p:.2f}s | {n:.2f}s | {delta:+.1%} | "
+                    f"{'ok' if ok else '**FAIL**'} |")
+        if not ok:
+            failures.append(
+                f"wall-clock regression: {name} took {n:.2f}s vs previous "
+                f"{p:.2f}s (budget {budget:.2f}s = prev x "
+                f"{WALL_REGRESSION_RATIO} + {WALL_ABS_SLACK_S}s)")
+
+    new_head, prev_head = new.get("headline", {}), prev.get("headline", {})
+    for key in DETERMINISTIC_KEYS:
+        if key not in prev_head:
+            if key in new_head:
+                rows.append(f"| headline.{key} | — | {new_head[key]} | — | "
+                            f"new baseline |")
+            continue
+        if key not in new_head:
+            failures.append(
+                f"headline metric disappeared: {key!r} was in the previous "
+                f"artifact but the fresh bench did not produce it")
+            rows.append(f"| headline.{key} | {prev_head[key]} | — | — | "
+                        f"**FAIL** (missing) |")
+            continue
+        p, n = float(prev_head[key]), float(new_head[key])
+        ok = not _drifted(n, p)
+        rows.append(f"| headline.{key} | {p:g} | {n:g} | "
+                    f"{n - p:+g} | {'ok' if ok else '**FAIL**'} |")
+        if not ok:
+            failures.append(
+                f"deterministic headline drift: {key} = {n!r} vs previous "
+                f"{p!r} — the engines are deterministic functions of the "
+                f"specs, so this is a simulation change, not noise")
+
+    p_cells = (prev_head.get("oracle_gap") or {}).get("n_cells")
+    n_cells = (new_head.get("oracle_gap") or {}).get("n_cells")
+    if p_cells is not None and n_cells is not None:
+        ok = n_cells >= p_cells
+        rows.append(f"| oracle_gap.n_cells | {p_cells} | {n_cells} | "
+                    f"{n_cells - p_cells:+d} | {'ok' if ok else '**FAIL**'} |")
+        if not ok:
+            failures.append(
+                f"oracle dominance coverage shrank: {n_cells} audited "
+                f"cell(s) vs previous {p_cells}")
+
+    _emit(rows)
+    assert not failures, "bench trend gate failed:\n  " + \
+        "\n  ".join(failures)
+    print(f"ok: {len(new_walls)} wall clock(s) within "
+          f"prev x {WALL_REGRESSION_RATIO} + {WALL_ABS_SLACK_S}s, "
+          f"deterministic headline metrics unchanged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))
